@@ -1,0 +1,78 @@
+"""Roofline table: reads the dry-run artifacts (framework deliverable g).
+
+Per (arch x shape x mesh): the three roofline terms in seconds, the
+dominant bottleneck, MODEL_FLOPS = 6·N·D (6·N_active·D for MoE) vs the
+trip-count-exact HLO dot FLOPs, and one-line guidance.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+from repro.configs import SHAPES, get as get_config
+from repro.launch.mesh import PEAK_FLOPS_BF16
+
+ARTIFACT_DIR = "artifacts/dryrun"
+
+
+def model_flops_per_device(arch: str, shape_name: str, chips: int) -> float:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n = cfg.param_count(active_only=(cfg.family == "moe"))
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens / chips
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens / chips
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch / chips
+
+
+def _table(artifact_dir: str, label: str):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(artifact_dir, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("status") != "ok" or "__opt-" in os.path.basename(path) \
+                and artifact_dir == ARTIFACT_DIR:
+            continue
+        arch, shape, mesh = rec["arch"], rec["shape"], rec["mesh"]
+        r = rec["roofline"]
+        hlo_flops = rec["cost"]["dot_flops_per_device"]
+        mf = model_flops_per_device(arch, shape, rec["chips"])
+        useful = mf / hlo_flops if hlo_flops else 0.0
+        bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        mfu_bound = (mf / PEAK_FLOPS_BF16) / bound if bound else 0.0
+        rows.append((arch, shape, mesh, bound, mfu_bound))
+        emit(f"roofline[{label}]/{arch}/{shape}/{mesh}", bound * 1e6,
+             f"compute_s={r['compute_s']:.4f};memory_s={r['memory_s']:.4f};"
+             f"collective_s={r['collective_s']:.4f};"
+             f"bottleneck={r['bottleneck']};"
+             f"useful_flops_ratio={useful:.2f};"
+             f"roofline_MFU_bound={100 * mfu_bound:.1f}%")
+    return rows
+
+
+def run() -> None:
+    base = {(a, s, m): b for a, s, m, b, _ in
+            _table(ARTIFACT_DIR, "baseline")}
+    final_dir = "artifacts/dryrun_final"
+    if os.path.isdir(final_dir):
+        final = _table(final_dir, "optimized")
+        gains = [(a, s, m, base[(a, s, m)] / b)
+                 for a, s, m, b, _ in final
+                 if (a, s, m) in base and b > 0]
+        if gains:
+            mean_gain = sum(g for *_, g in gains) / len(gains)
+            best = max(gains, key=lambda x: x[3])
+            emit("roofline/optimized_vs_baseline", 0.0,
+                 f"mean_speedup={mean_gain:.2f}x;"
+                 f"best={best[0]}/{best[1]}/{best[2]}={best[3]:.2f}x;"
+                 f"cells={len(gains)}")
+
+
+if __name__ == "__main__":
+    run()

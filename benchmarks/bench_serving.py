@@ -1,0 +1,45 @@
+"""Framework table: serving engine throughput/latency (decode path).
+
+Not a paper table (ScalAna has no serving section) — this benchmarks the
+framework's serving substrate: continuous batching through the slot
+engine at smoke scale, tok/s and per-request latency percentiles.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import get_smoke
+from repro.models.api import build_model
+from repro.serving import Request, ServingEngine
+
+ARCHS_BENCH = ["tinyllama-1.1b", "mamba2-130m", "zamba2-2.7b"]
+
+
+def run() -> None:
+    for arch in ARCHS_BENCH:
+        cfg = get_smoke(arch)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        engine = ServingEngine(model, params, batch_slots=4, max_seq=96)
+        rng = np.random.default_rng(0)
+        reqs = [Request(uid=i,
+                        prompt=rng.integers(1, cfg.vocab_size, size=6),
+                        max_new_tokens=16)
+                for i in range(8)]
+        t0 = time.perf_counter()
+        results = engine.run(reqs)
+        wall = time.perf_counter() - t0
+        toks = sum(len(r.tokens) for r in results)
+        lat = sorted(r.latency_s for r in results)
+        emit(f"serving/{arch}", wall / max(engine.decode_steps, 1) * 1e6,
+             f"tok_per_s={toks / wall:.1f};decode_steps={engine.decode_steps};"
+             f"p50_ms={lat[len(lat) // 2] * 1e3:.0f};"
+             f"p99_ms={lat[-1] * 1e3:.0f}")
+
+
+if __name__ == "__main__":
+    run()

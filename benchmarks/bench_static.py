@@ -1,0 +1,41 @@
+"""Paper Table III: static (compile-time) overhead.
+
+ScalAna-static = jaxpr trace + PSG build + contraction, measured against
+the program's own XLA compilation time (the paper reports 0.28–3.01% of
+LLVM compile time).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks.common import bench_setup, emit
+from repro.configs import ARCHS
+from repro.core import build_psg, contract
+
+
+def run() -> None:
+    fracs = []
+    for arch in ARCHS:
+        cfg, model, step, state, batch = bench_setup(arch, scale=1)
+        t0 = time.perf_counter()
+        lowered = jax.jit(step).lower(state, batch)
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        psg = build_psg(step, state, batch)
+        cpsg, _ = contract(psg, max_loop_depth=10)
+        t_static = time.perf_counter() - t0
+
+        frac = 100 * t_static / t_compile
+        fracs.append(frac)
+        emit(f"static/{arch}", t_static * 1e6,
+             f"compile_s={t_compile:.2f};static_pct={frac:.2f}%")
+    emit("static/mean", 0.0,
+         f"{sum(fracs)/len(fracs):.2f}% of compile time (paper: 0.89%)")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,37 @@
+"""Paper Table I + Fig. 11: storage cost.
+
+ScalAna's retained bytes (contracted PSG + per-vertex perf vectors +
+compressed comm records) vs. what a full tracer writes (one event per op
+execution per step, 64 B each) and a flat profiler (per-op counters).
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import bench_setup, emit
+from repro.core import GraphProfiler
+
+ARCHS_BENCH = ["tinyllama-1.1b", "yi-6b", "gemma-7b", "mamba2-130m",
+               "dbrx-132b", "zamba2-2.7b"]
+STEPS = 32
+
+
+def run() -> None:
+    for arch in ARCHS_BENCH:
+        cfg, model, step, state, batch = bench_setup(arch, scale=1)
+        prof = GraphProfiler(step, (state, batch), sample_every=8)
+        s = state
+        for _ in range(STEPS):
+            s, _ = prof.step(s, batch)
+        ours = prof.storage_bytes()
+        trace = prof.full_trace_bytes()
+        profile = len(prof.psg_full.vertices) * 8 * 4   # flat counters
+        emit(f"storage/{arch}", 0.0,
+             f"scalana={ours/1024:.1f}KiB;"
+             f"tracing={trace/2**20:.1f}MiB;"
+             f"profiling={profile/1024:.1f}KiB;"
+             f"ratio_trace_over_scalana={trace/max(ours,1):.0f}x")
+
+
+if __name__ == "__main__":
+    run()

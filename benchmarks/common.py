@@ -1,0 +1,62 @@
+"""Shared benchmark helpers."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke
+from repro.configs.base import RunConfig
+from repro.models.api import build_model
+from repro.optim import adamw_init
+from repro.optim.schedule import constant
+from repro.training.trainer import TrainState, make_train_step
+
+# benchmark workload: bigger than smoke tests so per-op dispatch overhead
+# in the instrumented interpreter is amortized (the paper's overhead
+# numbers are on real workloads, not toys)
+BENCH_BATCH = 8
+BENCH_SEQ = 128
+
+
+def bench_setup(arch: str, *, batch: int = BENCH_BATCH, seq: int = BENCH_SEQ,
+                scale: int = 2):
+    """(cfg, model, step_fn, state, batch) for a medium-size workload."""
+    cfg = get_smoke(arch)
+    cfg = cfg.replace(n_layers=cfg.n_layers * scale,
+                      d_model=cfg.d_model * scale,
+                      n_heads=max(cfg.n_heads * scale, 0) or cfg.n_heads,
+                      d_ff=cfg.d_ff * scale, remat=False)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    state = TrainState(params=params, opt=adamw_init(params), residual=None,
+                       step=jnp.zeros((), jnp.int32))
+    run = RunConfig(arch=arch)
+    step = make_train_step(model, run, constant(1e-3))
+    b = {"tokens": jnp.ones((batch, seq + 1), jnp.int32)}
+    if cfg.family == "encdec":
+        b["frames"] = jnp.ones((batch, cfg.frontend_len, cfg.d_model),
+                               cfg.cdtype())
+    if cfg.family == "vlm":
+        b["patches"] = jnp.ones((batch, cfg.frontend_len, cfg.d_model),
+                                cfg.cdtype())
+    return cfg, model, step, state, b
+
+
+def timeit(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Median seconds per call."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)

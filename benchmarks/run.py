@@ -1,0 +1,57 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines.
+
+  bench_psg        Table II   (PSG size, contraction ratio)
+  bench_static     Table III  (static/compile-time overhead)
+  bench_overhead   Table I + Fig. 10/13 (runtime overhead)
+  bench_storage    Table I + Fig. 11    (storage cost)
+  bench_detect     Table IV   (post-mortem detection cost)
+  bench_casestudy  §VI-D      (root-cause case studies)
+  bench_roofline   deliverable (g): roofline terms from the dry-run
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma-separated subset (psg,static,overhead,"
+                         "storage,detect,casestudy,roofline)")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_casestudy, bench_detect, bench_overhead,
+                            bench_psg, bench_roofline, bench_serving,
+                            bench_static, bench_storage)
+    suite = {
+        "roofline": bench_roofline.run,
+        "serving": bench_serving.run,
+        "psg": bench_psg.run,
+        "static": bench_static.run,
+        "storage": bench_storage.run,
+        "detect": bench_detect.run,
+        "casestudy": bench_casestudy.run,
+        "overhead": bench_overhead.run,
+    }
+    only = [s for s in args.only.split(",") if s]
+    print("name,us_per_call,derived")
+    failed = []
+    for name, fn in suite.items():
+        if only and name not in only:
+            continue
+        try:
+            fn()
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"FAILED benches: {failed}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

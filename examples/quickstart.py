@@ -1,0 +1,52 @@
+"""Quickstart: train a small LM with ScalAna profiling on, then render the
+scaling-loss report.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+from repro.configs import get_smoke
+from repro.configs.base import RunConfig, ShapeConfig
+from repro.core import build_ppg, detect_abnormal, backtrack, render_report
+from repro.training import Trainer
+
+
+def main() -> None:
+    run = RunConfig(
+        arch="tinyllama-1.1b",
+        total_steps=12,
+        learning_rate=1e-3,
+        warmup_steps=2,
+        scalana=True,                 # graph-guided profiling ON
+        scalana_sample_every=4,       # instrument every 4th step
+    )
+    cfg = get_smoke(run.arch)         # reduced same-family config (CPU)
+    shape = ShapeConfig("quickstart", seq_len=64, global_batch=4,
+                        kind="train")
+
+    trainer = Trainer(run, arch_cfg=cfg, shape=shape)
+    trainer.train(num_steps=run.total_steps)
+
+    losses = [m["loss"] for m in trainer.metrics_log if "loss" in m]
+    print(f"\nloss: {losses[0]:.3f} -> {losses[-1]:.3f} "
+          f"over {run.total_steps} steps")
+
+    # ScalAna artifacts: contracted PSG + per-vertex perf vectors
+    psg, perf, storage = trainer.scalana_artifacts()
+    print(f"PSG: {psg.stats()}")
+    print(f"profile storage: {storage / 1024:.1f} KiB "
+          f"(a full trace would be "
+          f"{trainer.profiler.full_trace_bytes() / 2**20:.1f} MiB)")
+
+    ppg = build_ppg(psg, n_procs=1, perf=perf)
+    report = render_report(ppg, [], detect_abnormal(ppg), [])
+    print("\n" + report)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""nemotron-4-15b [dense] — GQA, squared-ReLU MLP. [arXiv:2402.16819]"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="nemotron-4-15b",
+    family="dense",
+    n_layers=32,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    d_ff=24576,
+    vocab_size=256000,
+    mlp="relu2",                 # squared-ReLU, no gate
+    rope_theta=10000.0,
+)
+
+
+def smoke() -> ArchConfig:
+    return CONFIG.replace(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+        vocab_size=256, loss_chunk=16,
+    )

@@ -1,0 +1,22 @@
+"""tinyllama-1.1b [dense] — llama2-arch small, GQA. [arXiv:2401.02385]"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="tinyllama-1.1b",
+    family="dense",
+    n_layers=22,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=4,
+    d_ff=5632,
+    vocab_size=32000,
+    mlp="swiglu",
+    rope_theta=10000.0,
+)
+
+
+def smoke() -> ArchConfig:
+    return CONFIG.replace(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=96,
+        vocab_size=256, loss_chunk=16,
+    )

@@ -1,0 +1,38 @@
+"""ScalAna core: graph-based scaling-loss detection (the paper's contribution).
+
+Pipeline:  build_psg (static, jaxpr) -> contract -> [GraphProfiler runtime
+sampling | annotate_from_hlo comm refinement] -> build_ppg -> detect
+(non-scalable + abnormal) -> backtrack (Algorithm 1) -> render_report.
+"""
+from repro.core.backtrack import Path, backtrack, backtrack_one, root_causes
+from repro.core.commdep import CommLog, add_comm_edges, annotate_from_hlo
+from repro.core.contraction import contract
+from repro.core.detect import (
+    Abnormal,
+    NonScalable,
+    detect_abnormal,
+    detect_non_scalable,
+    fit_loglog,
+)
+from repro.core.graph import (
+    BRANCH, CALL, COMM, COMP, LOOP, ROOT,
+    PPG, PSG, PerfVector, Vertex,
+)
+from repro.core.hlo import collective_bytes_total, parse_collectives
+from repro.core.inject import simulate, simulate_series
+from repro.core.ppg import build_ppg
+from repro.core.profiler import GraphProfiler
+from repro.core.psg import build_psg
+from repro.core.report import render_report
+
+__all__ = [
+    "PSG", "PPG", "Vertex", "PerfVector",
+    "LOOP", "BRANCH", "CALL", "COMP", "COMM", "ROOT",
+    "build_psg", "contract", "GraphProfiler",
+    "annotate_from_hlo", "CommLog", "add_comm_edges",
+    "parse_collectives", "collective_bytes_total",
+    "build_ppg", "simulate", "simulate_series",
+    "detect_non_scalable", "detect_abnormal", "NonScalable", "Abnormal",
+    "fit_loglog", "backtrack", "backtrack_one", "root_causes", "Path",
+    "render_report",
+]

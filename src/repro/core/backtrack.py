@@ -1,0 +1,212 @@
+"""Backtracking root-cause detection (paper §IV-B, Algorithm 1).
+
+All edges are traversed in reverse (dependence direction).  From each
+problematic vertex we walk backward:
+
+  * at a p2p Comm vertex with a waiting event — follow the inter-process
+    communication-dependence edge to the partner process (edges without a
+    waiting event are pruned, the paper's search-space optimization);
+  * at an unscanned Loop/Branch vertex — follow the control-dependence edge
+    into the structure (continue from its *end* vertex);
+  * otherwise — follow the data-dependence edge to the predecessor (the
+    max-time predecessor when several exist);
+  * stop at the root or at a collective-communication vertex, except a
+    collective *start* vertex, where the walk jumps to the process whose
+    late arrival everyone waited on.
+
+The result is a set of causal paths over (process, vertex) pairs whose
+endpoints are the root-cause candidates, reported with source locations.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.core.detect import Abnormal, NonScalable
+from repro.core.graph import BRANCH, CALL, COMM, LOOP, PPG, PSG
+
+Node = Tuple[int, int]                     # (proc, vid)
+
+WAIT_COUNTER = "wait_s"
+WAIT_EPS = 1e-9
+
+
+@dataclasses.dataclass
+class Path:
+    nodes: List[Node]
+    start_reason: str                      # "non_scalable" | "abnormal"
+
+    @property
+    def root_cause(self) -> Node:
+        return self.nodes[-1]
+
+    def __iter__(self):
+        return iter(self.nodes)
+
+
+def _wait_of(ppg: PPG, node: Node) -> float:
+    vec = ppg.perf.get(node)
+    if vec is None:
+        return 0.0
+    return float(vec.counters.get(WAIT_COUNTER, 0.0))
+
+
+def _is_collective(psg: PSG, vid: int) -> bool:
+    v = psg.vertices[vid]
+    return v.kind == COMM and not v.p2p_pairs
+
+
+def _is_p2p(psg: PSG, vid: int) -> bool:
+    v = psg.vertices[vid]
+    return v.kind == COMM and bool(v.p2p_pairs)
+
+
+def _data_pred(ppg: PPG, node: Node, visited: Set[Node]) -> Optional[Node]:
+    proc, vid = node
+    preds = ppg.psg.preds(vid, "data")
+    cands = [(proc, p) for p in preds if (proc, p) not in visited]
+    if not cands:
+        return None
+    return max(cands, key=lambda n: ppg.get_time(*n))
+
+
+def _control_end(ppg: PPG, node: Node, visited: Set[Node]) -> Optional[Node]:
+    """Continue from the end (last child) of a Loop/Branch structure."""
+    proc, vid = node
+    kids = ppg.psg.children(vid)
+    for k in reversed(kids):
+        if (proc, k) not in visited:
+            return (proc, k)
+    return None
+
+
+def _comm_partner(ppg: PPG, node: Node, visited: Set[Node]) -> Optional[Node]:
+    partners = [p for p in ppg.comm_partners(*node) if p not in visited]
+    if not partners:
+        return None
+    # the cause is the partner we waited for: latest/most loaded one
+    return max(partners, key=lambda n: ppg.get_time(*n))
+
+
+def _latest_participant(ppg: PPG, node: Node) -> Optional[Node]:
+    """For a collective start vertex: the process everyone waited on —
+    the participant with the smallest wait (it arrived last)."""
+    proc, vid = node
+    group = [p for p in ppg.comm_partners(proc, vid)] + [node]
+    if len(group) <= 1:
+        return None
+    return min(group, key=lambda n: _wait_of(ppg, n))
+
+
+def backtrack_one(ppg: PPG, start: Node, *, reason: str,
+                  scanned: Set[Node], max_len: int = 256) -> Path:
+    psg = ppg.psg
+    path: List[Node] = []
+    v: Optional[Node] = start
+    first = True
+    while v is not None and len(path) < max_len:
+        proc, vid = v
+        vert = psg.vertices[vid]
+        if vert.kind == "Root":
+            break
+        if _is_collective(psg, vid) and not first:
+            path.append(v)                  # terminal collective
+            break
+        path.append(v)
+        nxt: Optional[Node] = None
+        visited = scanned | set(path)
+        if _is_collective(psg, vid):        # collective start vertex
+            late = _latest_participant(ppg, v)
+            if late is not None and late not in visited:
+                nxt = _data_pred(ppg, late, visited) or late
+            else:
+                nxt = _data_pred(ppg, v, visited)
+        elif _is_p2p(psg, vid):
+            if _wait_of(ppg, v) > WAIT_EPS:     # pruning: only waiting edges
+                nxt = _comm_partner(ppg, v, visited)
+            if nxt is None:
+                nxt = _data_pred(ppg, v, visited)
+        elif vert.kind in (LOOP, BRANCH, CALL) and v not in scanned:
+            nxt = _control_end(ppg, v, visited) or _data_pred(ppg, v, visited)
+        else:
+            nxt = _data_pred(ppg, v, visited)
+        first = False
+        v = nxt
+    scanned.update(path)
+    return Path(nodes=path, start_reason=reason)
+
+
+def backtrack(ppg: PPG, non_scalable: Sequence[NonScalable],
+              abnormal: Sequence[Abnormal]) -> List[Path]:
+    """Algorithm 1 Main(): non-scalable starts first, then unscanned
+    abnormal vertices."""
+    scanned: Set[Node] = set()
+    paths: List[Path] = []
+    for n in non_scalable:
+        times = ppg.times_across_procs(n.vid)
+        proc = max(range(ppg.n_procs), key=lambda p: times[p]) if times else 0
+        p = backtrack_one(ppg, (proc, n.vid), reason="non_scalable",
+                          scanned=scanned)
+        if p.nodes:
+            paths.append(p)
+    for a in abnormal:
+        if (a.proc, a.vid) in scanned:
+            continue
+        p = backtrack_one(ppg, (a.proc, a.vid), reason="abnormal",
+                          scanned=scanned)
+        if p.nodes:
+            paths.append(p)
+    return paths
+
+
+def _anomaly_score(ppg: PPG, node: Node) -> float:
+    """BUSY time above the cross-process typical for this vertex.
+
+    A propagated delay leaves every downstream vertex time-NORMAL (they
+    run at base speed, just later) and surfaces as WAITING at comm
+    vertices — which are symptoms, not causes.  Scoring busy time
+    (time - wait) makes the most anomalous node on a causal path the
+    worker that actually ran long, i.e. the root-cause candidate."""
+    vec = ppg.perf.get(node)
+    if vec is None:
+        return 0.0
+
+    def busy(p: int) -> float:
+        v = ppg.perf.get((p, node[1]))
+        if v is None:
+            return 0.0
+        return v.time - float(v.counters.get(WAIT_COUNTER, 0.0))
+
+    mine = busy(node[0])
+    others = sorted(b for p in range(ppg.n_procs)
+                    if (b := busy(p)) > 0.0)
+    if not others:
+        return mine
+    typical = others[len(others) // 2]
+    return mine - typical
+
+
+def root_causes(paths: Sequence[Path], psg: PSG, top_k: int = 5,
+                ppg: Optional[PPG] = None) -> List[Tuple[Node, str, str]]:
+    """Deduplicated root-cause vertices (node, name, source).
+
+    With a PPG, each path contributes its most ANOMALOUS node (see
+    _anomaly_score); without perf data, its terminal node (the paper's
+    raw Algorithm-1 endpoint).  Ranked by path count, then score."""
+    counts: Dict[Node, int] = {}
+    scores: Dict[Node, float] = {}
+    for p in paths:
+        if ppg is not None and p.nodes:
+            node = max(p.nodes, key=lambda n: _anomaly_score(ppg, n))
+            scores[node] = max(scores.get(node, 0.0),
+                               _anomaly_score(ppg, node))
+        else:
+            node = p.root_cause
+        counts[node] = counts.get(node, 0) + 1
+    ranked = sorted(counts,
+                    key=lambda n: (-counts[n], -scores.get(n, 0.0)))[:top_k]
+    out = []
+    for node in ranked:
+        v = psg.vertices[node[1]]
+        out.append((node, v.name, v.source))
+    return out

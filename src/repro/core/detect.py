@@ -1,0 +1,150 @@
+"""Location-aware problematic vertex detection (paper §IV-A).
+
+* Non-scalable vertices: per-vertex performance across job scales, merged
+  across processes (mean/median/max/cluster strategies), fitted with a
+  log-log model t ~ a * p^b; vertices whose growth rate deviates from the
+  ideal slope and whose share of total time is significant are flagged.
+
+* Abnormal vertices: per-vertex times across processes at one scale;
+  processes above AbnormThd x median are flagged.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.graph import COMM, COMP, LOOP, PPG
+
+
+@dataclasses.dataclass
+class NonScalable:
+    vid: int
+    slope: float                 # d log t / d log p  (ideal strong-scaling: -1)
+    share: float                 # fraction of total step time at max scale
+    score: float                 # ranking key
+    times: Dict[int, float]      # scale -> merged time
+    kind: str = ""
+    name: str = ""
+    source: str = ""
+
+
+@dataclasses.dataclass
+class Abnormal:
+    vid: int
+    proc: int
+    time: float
+    typical: float               # median across processes
+    ratio: float
+    kind: str = ""
+    name: str = ""
+    source: str = ""
+
+
+def _merge(times: Sequence[float], strategy: str) -> float:
+    arr = np.asarray([t for t in times if t > 0.0])
+    if arr.size == 0:
+        return 0.0
+    if strategy == "mean":
+        return float(arr.mean())
+    if strategy == "median":
+        return float(np.median(arr))
+    if strategy == "max":
+        return float(arr.max())
+    if strategy == "p0":
+        return float(times[0])
+    if strategy == "cluster":
+        # 2-means along sorted values; report the larger cluster's mean
+        s = np.sort(arr)
+        best_cut, best_gap = None, -1.0
+        for i in range(1, s.size):
+            gap = s[i] - s[i - 1]
+            if gap > best_gap:
+                best_gap, best_cut = gap, i
+        hi = s[best_cut:] if best_cut is not None else s
+        return float(hi.mean())
+    raise ValueError(strategy)
+
+
+def fit_loglog(scales: Sequence[int], times: Sequence[float]
+               ) -> Tuple[float, float]:
+    """Least-squares fit log t = log a + b log p. Returns (a, b)."""
+    xs, ys = [], []
+    for p, t in zip(scales, times):
+        if t > 0:
+            xs.append(math.log(p))
+            ys.append(math.log(t))
+    if len(xs) < 2:
+        return (times[-1] if times else 0.0), 0.0
+    b, loga = np.polyfit(xs, ys, 1)
+    return math.exp(loga), float(b)
+
+
+def detect_non_scalable(series: Mapping[int, PPG], *,
+                        ideal_slope: float = -1.0,
+                        slope_margin: float = 0.35,
+                        min_share: float = 0.02,
+                        top_k: int = 10,
+                        strategy: str = "mean") -> List[NonScalable]:
+    """series: {n_procs: PPG}. Flags vertices whose scaling slope deviates
+    from ideal by > slope_margin and whose time share is significant."""
+    scales = sorted(series)
+    if not scales:
+        return []
+    ref = series[scales[-1]]
+    psg = ref.psg
+    total_max = sum(max(ref.times_across_procs(v.vid) or [0.0])
+                    for v in psg.vertices if v.parent == psg.root) or 1e-12
+
+    out: List[NonScalable] = []
+    for v in psg.vertices:
+        merged: Dict[int, float] = {}
+        for p in scales:
+            ppg = series[p]
+            if v.vid < len(ppg.psg.vertices):
+                merged[p] = _merge(ppg.times_across_procs(v.vid), strategy)
+        if sum(merged.values()) <= 0:
+            continue
+        _, slope = fit_loglog(list(merged), list(merged.values()))
+        share = merged.get(scales[-1], 0.0) / total_max
+        deviation = slope - ideal_slope
+        if deviation > slope_margin and share >= min_share:
+            out.append(NonScalable(
+                vid=v.vid, slope=slope, share=share,
+                score=deviation * share, times=merged,
+                kind=v.kind, name=v.name, source=v.source))
+    out.sort(key=lambda d: -d.score)
+    return out[:top_k]
+
+
+def detect_abnormal(ppg: PPG, *, abnorm_thd: float = 1.3,
+                    min_share: float = 0.01,
+                    top_k: int = 20) -> List[Abnormal]:
+    psg = ppg.psg
+    step_time = max(
+        sum(ppg.get_time(p, v.vid) for v in psg.vertices
+            if v.parent == psg.root)
+        for p in range(ppg.n_procs)) or 1e-12
+    out: List[Abnormal] = []
+    for v in psg.vertices:
+        times = ppg.times_across_procs(v.vid)
+        arr = np.asarray(times)
+        if arr.max() <= 0:
+            continue
+        typical = float(np.median(arr))
+        for proc, t in enumerate(times):
+            if typical > 0 and t > abnorm_thd * typical \
+                    and (t - typical) / step_time >= min_share:
+                out.append(Abnormal(
+                    vid=v.vid, proc=proc, time=t, typical=typical,
+                    ratio=t / typical, kind=v.kind, name=v.name,
+                    source=v.source))
+            elif typical == 0 and t / step_time >= min_share:
+                out.append(Abnormal(vid=v.vid, proc=proc, time=t,
+                                    typical=typical, ratio=float("inf"),
+                                    kind=v.kind, name=v.name,
+                                    source=v.source))
+    out.sort(key=lambda d: -(d.time - d.typical))
+    return out[:top_k]

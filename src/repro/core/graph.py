@@ -1,0 +1,190 @@
+"""Program Structure Graph (PSG) and Program Performance Graph (PPG).
+
+Vertex kinds follow the paper (§III-A): Loop, Branch, Call, Comp, plus Comm
+(the MPI-vertex analogue: XLA/JAX collectives).  Edges carry a dependence
+kind: 'data' (sequential data flow), 'control' (enclosing control structure)
+and — on the PPG — 'comm' (inter-process communication dependence).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass, field
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+LOOP = "Loop"
+BRANCH = "Branch"
+CALL = "Call"
+COMP = "Comp"
+COMM = "Comm"
+ROOT = "Root"
+
+KINDS = (LOOP, BRANCH, CALL, COMP, COMM, ROOT)
+
+# collective primitives / HLO ops treated as Comm vertices
+COLLECTIVE_PRIMS = {
+    "psum", "pmax", "pmin", "all_gather", "all_gather_invariant",
+    "reduce_scatter", "all_to_all", "ppermute", "psum_scatter",
+}
+P2P_PRIMS = {"ppermute"}     # point-to-point-like (explicit src->dst pairs)
+
+
+@dataclass
+class Vertex:
+    vid: int
+    kind: str
+    name: str                         # primitive / structure name
+    source: str = ""                  # "file.py:123" best user frame
+    parent: int = -1                  # enclosing Loop/Branch/Call vid
+    depth: int = 0                    # control-nest depth
+    prims: List[str] = field(default_factory=list)
+    # static "hardware counters" (PAPI analogue), per single execution:
+    flops: float = 0.0
+    bytes: float = 0.0
+    comm_bytes: float = 0.0
+    comm_kind: str = ""               # all_reduce | all_gather | ...
+    p2p_pairs: List[Tuple[int, int]] = field(default_factory=list)
+    meta: Dict[str, Any] = field(default_factory=dict)
+
+    @property
+    def is_comm(self) -> bool:
+        return self.kind == COMM
+
+    @property
+    def is_control(self) -> bool:
+        return self.kind in (LOOP, BRANCH, CALL)
+
+
+@dataclass
+class PSG:
+    """Per-process program structure graph.
+
+    ``order`` is program (execution) order of vertex ids.  Data-dependence
+    edges are implied by consecutive order within the same parent; control
+    edges connect a control vertex to its children.  Both are materialized
+    in ``edges`` for analysis/serialization.
+    """
+    vertices: List[Vertex] = field(default_factory=list)
+    edges: Set[Tuple[int, int, str]] = field(default_factory=set)  # (src,dst,kind)
+    root: int = 0
+
+    # ------------------------------------------------------------------
+    def new_vertex(self, kind: str, name: str, *, source: str = "",
+                   parent: int = -1, depth: int = 0, **meta) -> Vertex:
+        v = Vertex(vid=len(self.vertices), kind=kind, name=name, source=source,
+                   parent=parent, depth=depth)
+        for k, val in meta.items():
+            setattr(v, k, val) if hasattr(v, k) else v.meta.__setitem__(k, val)
+        self.vertices.append(v)
+        return v
+
+    def add_edge(self, src: int, dst: int, kind: str = "data") -> None:
+        if src != dst:
+            self.edges.add((src, dst, kind))
+
+    def children(self, vid: int) -> List[int]:
+        return [v.vid for v in self.vertices if v.parent == vid]
+
+    def preds(self, vid: int, kind: Optional[str] = None) -> List[int]:
+        return [s for (s, d, k) in self.edges
+                if d == vid and (kind is None or k == kind)]
+
+    def succs(self, vid: int, kind: Optional[str] = None) -> List[int]:
+        return [d for (s, d, k) in self.edges
+                if s == vid and (kind is None or k == kind)]
+
+    def by_kind(self, kind: str) -> List[Vertex]:
+        return [v for v in self.vertices if v.kind == kind]
+
+    def stats(self) -> Dict[str, int]:
+        out = {k: 0 for k in KINDS}
+        for v in self.vertices:
+            out[v.kind] += 1
+        out["total"] = len(self.vertices)
+        return out
+
+    # ------------------------------------------------------------------
+    def to_json(self) -> str:
+        return json.dumps({
+            "vertices": [dataclasses.asdict(v) for v in self.vertices],
+            "edges": sorted(self.edges),
+            "root": self.root,
+        })
+
+    @classmethod
+    def from_json(cls, text: str) -> "PSG":
+        raw = json.loads(text)
+        g = cls(root=raw["root"])
+        for d in raw["vertices"]:
+            d["p2p_pairs"] = [tuple(p) for p in d.get("p2p_pairs", [])]
+            g.vertices.append(Vertex(**d))
+        g.edges = {(s, d, k) for s, d, k in raw["edges"]}
+        return g
+
+    def nbytes(self) -> int:
+        """Serialized storage footprint (paper Table I 'storage cost')."""
+        return len(self.to_json().encode())
+
+
+# ---------------------------------------------------------------------------
+# PPG
+# ---------------------------------------------------------------------------
+
+@dataclass
+class PerfVector:
+    """Per-(process, vertex) performance vector (paper §III-B1)."""
+    time: float = 0.0                 # seconds (mean over samples)
+    time_var: float = 0.0
+    samples: int = 0
+    counters: Dict[str, float] = field(default_factory=dict)  # PAPI analogue
+
+
+@dataclass
+class PPG:
+    """Program performance graph: the PSG replicated across ``n_procs``
+    SPMD processes + inter-process communication dependence + perf data.
+
+    PPG vertex id = (proc, vid).  Comm edges: for collectives an edge set
+    over all participants; for p2p explicit (src_proc, dst_proc) pairs.
+    """
+    psg: PSG
+    n_procs: int
+    perf: Dict[Tuple[int, int], PerfVector] = field(default_factory=dict)
+    comm_edges: Set[Tuple[Tuple[int, int], Tuple[int, int]]] = \
+        field(default_factory=set)    # ((proc,vid) -> (proc,vid))
+    meta: Dict[str, Any] = field(default_factory=dict)
+
+    def set_perf(self, proc: int, vid: int, vec: PerfVector) -> None:
+        self.perf[(proc, vid)] = vec
+
+    def get_time(self, proc: int, vid: int) -> float:
+        v = self.perf.get((proc, vid))
+        return v.time if v else 0.0
+
+    def times_across_procs(self, vid: int) -> List[float]:
+        return [self.get_time(p, vid) for p in range(self.n_procs)]
+
+    def add_collective_edges(self, vid: int,
+                             procs: Optional[Sequence[int]] = None) -> None:
+        """Clique edges among participants (collective comm dependence)."""
+        procs = range(self.n_procs) if procs is None else procs
+        procs = list(procs)
+        for i in procs:
+            for j in procs:
+                if i != j:
+                    self.comm_edges.add(((i, vid), (j, vid)))
+
+    def add_p2p_edge(self, src_proc: int, src_vid: int,
+                     dst_proc: int, dst_vid: int) -> None:
+        self.comm_edges.add(((src_proc, src_vid), (dst_proc, dst_vid)))
+
+    def comm_partners(self, proc: int, vid: int) -> List[Tuple[int, int]]:
+        """Processes/vertices this (proc, vid) depends on (reverse edges)."""
+        return [src for (src, dst) in self.comm_edges
+                if dst == (proc, vid)]
+
+    def nbytes(self) -> int:
+        per_vec = 8 * (3 + 2 * max((len(v.counters) for v in
+                                    self.perf.values()), default=0))
+        return (self.psg.nbytes() + len(self.perf) * per_vec
+                + 16 * len(self.comm_edges))

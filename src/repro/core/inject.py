@@ -1,0 +1,174 @@
+"""Dependence-driven performance simulation + delay injection.
+
+Reproduces the paper's evaluation methodology (§II motivating example: a
+delay injected into process 4 of NPB-CG propagates through communication
+dependence until an MPI_Allreduce exposes it as scaling loss).  Given a PSG
+with Comm vertices, per-vertex base times, and injected per-(process,vertex)
+delays, the simulator executes the dependence graph: processes advance
+clocks through Comp vertices, block at p2p edges until the partner arrives
+and at collectives until the whole replica group arrives.  Waiting time is
+recorded in the 'wait_s' counter — exactly the signal Algorithm 1's pruning
+keys on.
+
+The same machinery generates multi-scale series for non-scalable-vertex
+detection, with per-vertex scaling laws (ideal 1/p compute, logarithmic
+collectives, serial fractions, ...).  Measured single-scale profiles from
+GraphProfiler can seed ``base_times`` so case studies run on real models.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.graph import BRANCH, CALL, COMM, COMP, LOOP, PPG, PSG, PerfVector
+from repro.core.ppg import build_ppg
+
+# default comm model constants (tunable; roughly ICI-like)
+LATENCY_S = 1e-6
+BANDWIDTH = 50e9
+
+
+def _subtree_has_comm(psg: PSG, vid: int, cache: Dict[int, bool]) -> bool:
+    if vid in cache:
+        return cache[vid]
+    v = psg.vertices[vid]
+    r = v.kind == COMM or any(_subtree_has_comm(psg, c, cache)
+                              for c in psg.children(vid))
+    cache[vid] = r
+    return r
+
+
+def schedule(psg: PSG) -> List[int]:
+    """Flattened execution schedule: control structures containing comm are
+    expanded so communication ordering is visible; others are atomic."""
+    cache: Dict[int, bool] = {}
+    out: List[int] = []
+
+    def walk(vid: int):
+        for c in psg.children(vid):
+            v = psg.vertices[c]
+            if v.kind in (LOOP, BRANCH, CALL) and _subtree_has_comm(psg, c,
+                                                                    cache):
+                walk(c)
+            else:
+                out.append(c)
+
+    walk(psg.root)
+    return out
+
+
+def default_comm_time(v, n_procs: int, group: Sequence[int]) -> float:
+    g = max(len(group), 2)
+    steps = max(int(np.ceil(np.log2(g))), 1)
+    return LATENCY_S * steps + float(v.comm_bytes) / BANDWIDTH
+
+
+@dataclasses.dataclass
+class SimResult:
+    ppg: PPG
+    clocks: List[float]                    # final per-process time
+    sched: List[int]
+
+    @property
+    def makespan(self) -> float:
+        return max(self.clocks) if self.clocks else 0.0
+
+
+def simulate(psg: PSG, n_procs: int,
+             base_times: Callable[[int, int], float],
+             *,
+             inject: Optional[Mapping[Tuple[int, int], float]] = None,
+             comm_time: Callable = default_comm_time,
+             jitter: float = 0.0,
+             seed: int = 0) -> SimResult:
+    """Run the dependence simulation.
+
+    base_times(proc, vid) -> seconds for Comp/atomic-control vertices.
+    inject: {(proc, vid): extra_seconds} delay injection.
+    """
+    inject = dict(inject or {})
+    rng = np.random.default_rng(seed)
+    sched = schedule(psg)
+    clocks = [0.0] * n_procs
+    perf: Dict[int, Dict[int, PerfVector]] = {p: {} for p in range(n_procs)}
+
+    for vid in sched:
+        v = psg.vertices[vid]
+        if v.kind == COMM:
+            groups = v.meta.get("replica_groups") or [list(range(n_procs))]
+            if v.p2p_pairs:
+                tc = comm_time(v, n_procs, [0, 1])
+                for (s, d) in v.p2p_pairs:
+                    if s >= n_procs or d >= n_procs:
+                        continue
+                    wait = max(0.0, clocks[s] - clocks[d])
+                    perf[d][vid] = PerfVector(
+                        time=wait + tc, samples=1,
+                        counters={"wait_s": wait,
+                                  "comm_bytes": v.comm_bytes})
+                    sv = perf[s].setdefault(
+                        vid, PerfVector(time=tc, samples=1,
+                                        counters={"wait_s": 0.0,
+                                                  "comm_bytes": v.comm_bytes}))
+                    clocks[d] = max(clocks[d], clocks[s]) + tc
+                    clocks[s] += tc
+            else:
+                for g in groups:
+                    g = [p for p in g if p < n_procs]
+                    if not g:
+                        continue
+                    tc = comm_time(v, n_procs, g)
+                    sync = max(clocks[p] for p in g)
+                    for p in g:
+                        wait = sync - clocks[p]
+                        perf[p][vid] = PerfVector(
+                            time=wait + tc, samples=1,
+                            counters={"wait_s": wait,
+                                      "comm_bytes": v.comm_bytes})
+                        clocks[p] = sync + tc
+            continue
+        for p in range(n_procs):
+            t = max(base_times(p, vid), 0.0)
+            t += inject.get((p, vid), 0.0)
+            if jitter:
+                t *= float(1.0 + jitter * rng.standard_normal())
+                t = max(t, 0.0)
+            perf[p][vid] = PerfVector(
+                time=t, samples=1,
+                counters={"flops": v.flops, "bytes": v.bytes})
+            clocks[p] += t
+
+    ppg = build_ppg(psg, n_procs, perf)
+    ppg.meta["makespan"] = max(clocks) if clocks else 0.0
+    return SimResult(ppg=ppg, clocks=clocks, sched=sched)
+
+
+# ---------------------------------------------------------------------------
+# Multi-scale series generation (non-scalable vertex detection input)
+# ---------------------------------------------------------------------------
+
+def ideal_strong_scaling(t1: float):
+    return lambda p: t1 / p
+
+
+def serial_fraction(t1: float, frac: float):
+    """Amdahl: a fraction of the vertex does not parallelize."""
+    return lambda p: t1 * (frac + (1.0 - frac) / p)
+
+
+def simulate_series(psg: PSG, scales: Sequence[int],
+                    time_at_scale: Callable[[int, int, int], float],
+                    *,
+                    inject: Optional[Mapping[Tuple[int, int], float]] = None,
+                    comm_time: Callable = default_comm_time,
+                    jitter: float = 0.0, seed: int = 0) -> Dict[int, PPG]:
+    """{n_procs: PPG} series. time_at_scale(proc, vid, n_procs) -> seconds."""
+    out: Dict[int, PPG] = {}
+    for n in scales:
+        res = simulate(
+            psg, n, lambda p, vid: time_at_scale(p, vid, n),
+            inject=inject, comm_time=comm_time, jitter=jitter, seed=seed + n)
+        out[n] = res.ppg
+    return out

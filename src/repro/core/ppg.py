@@ -1,0 +1,37 @@
+"""PPG assembly: per-process PSG replicas + perf vectors + comm edges."""
+from __future__ import annotations
+
+from typing import Dict, Mapping, Optional, Sequence, Union
+
+from repro.core.commdep import add_comm_edges
+from repro.core.graph import PPG, PSG, PerfVector
+
+PerfByProc = Mapping[int, Mapping[int, PerfVector]]
+
+
+def build_ppg(psg: PSG, n_procs: int,
+              perf: Optional[Union[Mapping[int, PerfVector], PerfByProc]] = None,
+              *, replicate: bool = True, meta: Optional[dict] = None) -> PPG:
+    """Assemble a PPG.
+
+    ``perf`` is either {vid: PerfVector} (replicated to all processes — the
+    single-controller measured channel) or {proc: {vid: PerfVector}} for
+    per-process data (simulator / per-shard timing).
+    """
+    ppg = PPG(psg=psg, n_procs=n_procs, meta=dict(meta or {}))
+    if perf:
+        first = next(iter(perf.values()))
+        if isinstance(first, PerfVector):        # {vid: vec}
+            if replicate:
+                for p in range(n_procs):
+                    for vid, vec in perf.items():
+                        ppg.set_perf(p, vid, vec)
+            else:
+                for vid, vec in perf.items():
+                    ppg.set_perf(0, vid, vec)
+        else:                                    # {proc: {vid: vec}}
+            for p, d in perf.items():
+                for vid, vec in d.items():
+                    ppg.set_perf(p, vid, vec)
+    add_comm_edges(ppg)
+    return ppg

@@ -1,0 +1,186 @@
+"""Graph-guided sampling profiler (paper §III-B).
+
+OS-interrupt sampling of a running XLA executable cannot attribute time to
+IR vertices (the program is a single fused binary), so the TPU/JAX-native
+equivalent samples in *step space*: every K-th step is executed through an
+instrumented jaxpr interpreter that times each top-level PSG vertex
+(`block_until_ready` fences); all other steps run the compiled fast path.
+Expected overhead ≈ (instrumented_step/compiled_step − 1)/K, directly
+tunable like the paper's sampling frequency — measured by
+benchmarks/bench_overhead.py.
+
+Per-vertex performance vectors combine this measured channel with the
+static counter channel (flops/bytes from repro.core.costs), the PAPI
+analogue.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.core import psg as psg_lib
+from repro.core.contraction import contract
+from repro.core.graph import COMM, PSG, PerfVector
+
+
+def _block(x):
+    return jax.tree.map(
+        lambda v: v.block_until_ready() if hasattr(v, "block_until_ready")
+        else v, x)
+
+
+class _TimedEval:
+    """eval_jaxpr with a per-top-level-eqn timing callback."""
+
+    def __init__(self, closed_jaxpr):
+        self.closed = closed_jaxpr
+
+    def __call__(self, args: Sequence[Any],
+                 on_eqn: Callable[[int, float], None]) -> List[Any]:
+        from jax._src.core import Literal
+        jaxpr = self.closed.jaxpr
+        env: Dict[Any, Any] = {}
+
+        def read(v):
+            return v.val if isinstance(v, Literal) else env[v]
+
+        def write(v, val):
+            env[v] = val
+
+        for var, val in zip(jaxpr.constvars, self.closed.consts):
+            write(var, val)
+        flat = list(args)
+        assert len(flat) == len(jaxpr.invars), \
+            (len(flat), len(jaxpr.invars))
+        for var, val in zip(jaxpr.invars, flat):
+            write(var, val)
+
+        for idx, eqn in enumerate(jaxpr.eqns):
+            invals = [read(v) for v in eqn.invars]
+            subfuns, bind_params = eqn.primitive.get_bind_params(eqn.params)
+            t0 = time.perf_counter()
+            ans = eqn.primitive.bind(*subfuns, *invals, **bind_params)
+            _block(ans)
+            on_eqn(idx, time.perf_counter() - t0)
+            if eqn.primitive.multiple_results:
+                for var, val in zip(eqn.outvars, ans):
+                    write(var, val)
+            else:
+                write(eqn.outvars[0], ans)
+        return [read(v) for v in jaxpr.outvars]
+
+
+class GraphProfiler:
+    """Profiles ``fn`` at PSG-vertex granularity with step-space sampling.
+
+    Storage accounting mirrors the paper: per-vertex perf vectors (KBs)
+    instead of per-event traces (GBs).
+    """
+
+    def __init__(self, fn: Callable, example_args: Sequence[Any], *,
+                 sample_every: int = 16, max_loop_depth: int = 10,
+                 static_argnums: Tuple[int, ...] = ()):
+        self.fn = fn
+        self.sample_every = max(int(sample_every), 1)
+        self.closed = jax.make_jaxpr(fn)(*example_args)
+        self.psg_full = psg_lib.build_psg(jaxpr=self.closed)
+        self.psg, self.mapping = contract(self.psg_full, max_loop_depth)
+        # top-level eqn index -> contracted vertex id
+        top = psg_lib.top_level_order(self.psg_full)
+        self._eqn_to_vertex = [self.mapping.get(vid, self.psg.root)
+                               for vid in top]
+        self._compiled = jax.jit(fn)
+        self._evaluator = _TimedEval(self.closed)
+        # accumulators
+        self._vertex_times: Dict[int, List[float]] = {}
+        self.step_times: List[float] = []
+        self.sampled_steps = 0
+        self.total_steps = 0
+
+    # ------------------------------------------------------------------
+    def step(self, *args) -> Any:
+        """Run one step; every K-th step is the instrumented sampled run."""
+        self.total_steps += 1
+        if self.total_steps % self.sample_every == 0:
+            return self._sampled_step(*args)
+        t0 = time.perf_counter()
+        out = self._compiled(*args)
+        _block(out)
+        self.step_times.append(time.perf_counter() - t0)
+        return out
+
+    def _sampled_step(self, *args) -> Any:
+        self.sampled_steps += 1
+        flat, _ = jax.tree.flatten(args)
+
+        def on_eqn(idx: int, dt: float):
+            vid = self._eqn_to_vertex[idx]
+            self._vertex_times.setdefault(vid, []).append(dt)
+
+        t0 = time.perf_counter()
+        outs = self._evaluator(flat, on_eqn)
+        self.step_times.append(time.perf_counter() - t0)
+        out_tree = jax.tree.structure(
+            jax.eval_shape(self.fn, *args))
+        return jax.tree.unflatten(out_tree, outs)
+
+    # ------------------------------------------------------------------
+    def perf_vectors(self) -> Dict[int, PerfVector]:
+        """Per-vertex perf vectors: measured time + static counters."""
+        out: Dict[int, PerfVector] = {}
+        for v in self.psg.vertices:
+            times = self._vertex_times.get(v.vid, [])
+            counters = {"flops": v.flops, "bytes": v.bytes,
+                        "comm_bytes": v.comm_bytes}
+            if times:
+                t = float(np.mean(times))
+                counters["flops_per_sec"] = v.flops / t if t > 0 else 0.0
+                out[v.vid] = PerfVector(time=t,
+                                        time_var=float(np.var(times)),
+                                        samples=len(times),
+                                        counters=counters)
+            elif v.flops or v.comm_bytes:
+                out[v.vid] = PerfVector(time=0.0, samples=0,
+                                        counters=counters)
+        return out
+
+    def storage_bytes(self) -> int:
+        """Bytes ScalAna retains: contracted PSG + per-vertex vectors."""
+        vec_bytes = sum(8 * (3 + len(v.counters))
+                        for v in self.perf_vectors().values())
+        return self.psg.nbytes() + vec_bytes
+
+    def full_trace_bytes(self) -> int:
+        """What a full per-event tracer would have written for the same run:
+        one 64-byte event per (eqn execution, step) incl. loop iterations."""
+        events_per_step = 0
+        for v in self.psg_full.vertices:
+            trips = 1
+            p = v.parent
+            while p >= 0:
+                trips *= int(self.psg_full.vertices[p].meta.get(
+                    "trip_count", 1) or 1)
+                p = self.psg_full.vertices[p].parent
+            events_per_step += trips
+        return events_per_step * 64 * self.total_steps
+
+    def overhead_estimate(self) -> Dict[str, float]:
+        if not self.step_times:
+            return {}
+        fast = [t for i, t in enumerate(self.step_times, start=1)
+                if i % self.sample_every != 0]
+        slow = [t for i, t in enumerate(self.step_times, start=1)
+                if i % self.sample_every == 0]
+        if not fast:
+            return {}
+        base = float(np.median(fast))
+        extra = sum(max(t - base, 0.0) for t in slow)
+        total = sum(self.step_times)
+        return {
+            "base_step_s": base,
+            "sampled_step_s": float(np.median(slow)) if slow else 0.0,
+            "overhead_frac": extra / max(total - extra, 1e-12),
+        }

@@ -1,0 +1,3 @@
+from repro.data.pipeline import SyntheticLMDataset, make_dataset
+
+__all__ = ["SyntheticLMDataset", "make_dataset"]

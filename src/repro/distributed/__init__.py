@@ -1,0 +1,13 @@
+from repro.distributed.axes import (
+    DEFAULT_RULES,
+    logical_constraint,
+    resolve_axis,
+    sharding_for,
+    spec_for,
+    use_rules,
+)
+
+__all__ = [
+    "DEFAULT_RULES", "logical_constraint", "resolve_axis", "sharding_for",
+    "spec_for", "use_rules",
+]

@@ -1,0 +1,170 @@
+"""Logical-axis sharding rules.
+
+Models are written mesh-agnostic against *logical* axis names
+('batch', 'embed', 'q_features', 'vocab', 'experts', ...).  A launcher
+installs a rule table + mesh via ``use_rules``; ``logical_constraint`` then
+applies ``with_sharding_constraint`` and ``spec_for`` resolves parameter
+PartitionSpecs.  Without an active context everything is a no-op, so unit
+tests and single-device runs never touch the mesh machinery.
+
+Rules map logical name -> mesh axis (str), tuple of mesh axes, or None.
+A logical dim is only sharded if its size is divisible by the mesh axis
+product (GSPMD padding is legal but wasteful; we opt out explicitly —
+e.g. yi-6b's 4 KV heads on a 16-way model axis stay replicated).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+Rule = Union[str, Tuple[str, ...], None]
+
+# Default logical rules for the production 2D/3D mesh.
+DEFAULT_RULES: Dict[str, Rule] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "res_seq": None,           # residual-stream seq; "model" under SP (§Perf it.3)
+    "kv_seq": None,            # overridden to "data" for long-context serving
+    "embed": "data",           # FSDP dimension for params
+    "q_features": "model",     # n_heads * head_dim
+    "kv_features": "model",    # n_kv_heads * head_dim
+    "heads": "model",          # per-head activation axis
+    "kv_heads": "model",
+    "mlp": "model",            # d_ff
+    "vocab": "model",
+    "experts": "model",        # EP
+    "ssm_inner": "model",      # d_inner of SSD blocks
+    "ssm_heads": "model",
+    "ssm_pdim": "model",       # SSD head_dim fallback when H % model != 0
+    "layers": None,
+    "frontend": None,
+    "state": None,
+    "conv": None,
+}
+
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.rules: Dict[str, Rule] = {}
+        self.options: Dict[str, bool] = {}
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def use_rules(mesh: Mesh, rules: Optional[Dict[str, Rule]] = None,
+              options: Optional[Dict[str, bool]] = None):
+    """Install mesh + logical rules (+ optimization options) for the region.
+
+    Options (all default off — the paper-faithful baseline):
+      * ``gather_weights`` — ZeRO-3-style FSDP: weights stay sharded on
+        'data' in HBM but are all-gathered at their matmul (a per-layer
+        weight AG of MBs replaces per-layer activation all-reduces of
+        GBs; see EXPERIMENTS.md §Perf iteration 1).
+    """
+    prev = (_CTX.mesh, _CTX.rules, _CTX.options)
+    _CTX.mesh = mesh
+    _CTX.rules = dict(DEFAULT_RULES if rules is None else rules)
+    _CTX.options = dict(options or {})
+    try:
+        with mesh:
+            yield
+    finally:
+        _CTX.mesh, _CTX.rules, _CTX.options = prev
+
+
+def active_mesh() -> Optional[Mesh]:
+    return _CTX.mesh
+
+
+def option(name: str) -> bool:
+    return bool(_CTX.options.get(name, False))
+
+
+def weight_constraint(w: jax.Array, *logical_axes: Optional[str]
+                      ) -> jax.Array:
+    """FSDP gather-at-use point for a weight matrix.
+
+    No-op unless the ``gather_weights`` option is on; then the weight's
+    'embed' (FSDP-storage) dim is constrained to be replicated right
+    before the matmul, so GSPMD all-gathers the small weight shards
+    instead of all-reducing large partial-sum activations."""
+    if not option("gather_weights"):
+        return w
+    axes = tuple(None if a == "embed" else a for a in logical_axes)
+    return logical_constraint(w, *axes)
+
+
+def _mesh_axes_of(rule: Rule, mesh: Mesh) -> Tuple[str, ...]:
+    if rule is None:
+        return ()
+    axes = (rule,) if isinstance(rule, str) else tuple(rule)
+    return tuple(a for a in axes if a in mesh.axis_names)
+
+
+def _axis_product(axes: Tuple[str, ...], mesh: Mesh) -> int:
+    p = 1
+    for a in axes:
+        p *= mesh.shape[a]
+    return p
+
+
+def resolve_axis(logical: Optional[str], dim_size: int,
+                 mesh: Optional[Mesh] = None,
+                 rules: Optional[Dict[str, Rule]] = None) -> Rule:
+    """Mesh axes for one logical dim, or None (incl. non-divisible opt-out)."""
+    mesh = mesh or _CTX.mesh
+    rules = rules if rules is not None else _CTX.rules
+    if mesh is None or logical is None:
+        return None
+    axes = _mesh_axes_of(rules.get(logical), mesh)
+    if not axes:
+        return None
+    if dim_size % _axis_product(axes, mesh) != 0:
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+def spec_for(logical_axes: Sequence[Optional[str]],
+             shape: Sequence[int],
+             mesh: Optional[Mesh] = None,
+             rules: Optional[Dict[str, Rule]] = None) -> PartitionSpec:
+    """PartitionSpec for a value with the given logical axes and shape."""
+    used: set = set()
+    parts = []
+    for name, size in zip(logical_axes, shape):
+        ax = resolve_axis(name, size, mesh, rules)
+        # one mesh axis may shard at most one dim
+        flat = () if ax is None else ((ax,) if isinstance(ax, str) else tuple(ax))
+        if any(a in used for a in flat):
+            ax = None
+            flat = ()
+        used.update(flat)
+        parts.append(ax)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return PartitionSpec(*parts)
+
+
+def logical_constraint(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
+    """with_sharding_constraint via logical names; no-op without context."""
+    mesh = _CTX.mesh
+    if mesh is None:
+        return x
+    spec = spec_for(logical_axes, x.shape, mesh, _CTX.rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def sharding_for(logical_axes: Sequence[Optional[str]],
+                 shape: Sequence[int],
+                 mesh: Optional[Mesh] = None,
+                 rules: Optional[Dict[str, Rule]] = None) -> NamedSharding:
+    mesh = mesh or _CTX.mesh
+    assert mesh is not None, "sharding_for requires a mesh"
+    return NamedSharding(mesh, spec_for(logical_axes, shape, mesh, rules))

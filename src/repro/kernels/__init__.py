@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each kernel ships three files: ``kernel.py`` (pl.pallas_call + BlockSpec
+VMEM tiling), ``ops.py`` (the jit'd public wrapper with CPU-interpret
+fallback), ``ref.py`` (the pure-jnp oracle tests assert against).
+"""
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.ssd_scan.ops import ssd_scan
+
+__all__ = ["flash_attention", "ssd_scan"]

@@ -1,0 +1,137 @@
+"""Flash-attention Pallas TPU kernel (GQA, causal or full).
+
+TPU-native tiling, not a CUDA port:
+
+* Grid ``(B, nq, Sq/BQ, Sk/BK)`` — the last (K) dimension is innermost and
+  *sequential* on TPU, so the online-softmax running state (m, l, acc)
+  lives in VMEM scratch carried across K iterations; output is written
+  once, on the final K block (output BlockSpec revisits the same tile).
+* BlockSpecs keep one (BQ, h) query tile, one (BK, h) key/value tile in
+  VMEM; all matmuls are (BQ×h)·(h×BK) and (BQ×BK)·(BK×h) — MXU-shaped,
+  128-aligned for h ∈ {64, 128, 256}.
+* GQA is an *index-map* property: the K/V BlockSpec maps query head
+  ``qh -> qh // group`` so no KV replication is materialized in HBM or
+  VMEM (the CUDA trick of shared-memory broadcast becomes pure indexing).
+* Causal skipping: K blocks strictly above the diagonal are skipped via
+  ``pl.when`` (compute-masked); the fully-unmasked interior skips the
+  per-element mask entirely.
+
+Accumulation in f32 regardless of input dtype.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref,
+                 m_scr, l_scr, acc_scr, *,
+                 softmax_scale: float, causal: bool,
+                 block_q: int, block_k: int, num_k_blocks: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+
+    # causal: skip K blocks entirely above the diagonal
+    def compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # (BQ, h)
+        k = k_ref[0, 0].astype(jnp.float32)            # (BK, h)
+        v = v_ref[0, 0].astype(jnp.float32)            # (BK, h)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * softmax_scale  # (BQ, BK)
+        if causal:
+            rows = q_start + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            cols = k_start + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(cols <= rows, s, NEG_INF)
+        m_prev = m_scr[...]                             # (BQ,)
+        l_prev = l_scr[...]
+        m_cur = jnp.max(s, axis=1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[:, None])                 # (BQ, BK)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    if causal:
+        # block needed iff some (row >= col): k_start <= q_start + BQ - 1
+        needed = k_start <= q_start + block_q - 1
+        pl.when(needed)(compute)
+    else:
+        compute()
+
+    @pl.when(ki == num_k_blocks - 1)
+    def _finalize():
+        l = l_scr[...]
+        # rows with no valid keys (can't happen for causal Sq==Sk) -> 0
+        safe = jnp.where(l > 0.0, l, 1.0)
+        o_ref[0, 0] = (acc_scr[...] / safe[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "softmax_scale", "block_q", "block_k",
+                     "interpret"))
+def flash_attention_kernel(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True,
+                           softmax_scale: Optional[float] = None,
+                           block_q: int = 128, block_k: int = 128,
+                           interpret: bool = False) -> jax.Array:
+    """q: (B, nq, Sq, h); k, v: (B, nkv, Sk, h) -> (B, nq, Sq, h)."""
+    B, nq, Sq, h = q.shape
+    nkv, Sk = k.shape[1], k.shape[2]
+    assert nq % nkv == 0, (nq, nkv)
+    group = nq // nkv
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    assert Sq % block_q == 0, (Sq, block_q)
+    assert Sk % block_k == 0, (Sk, block_k)
+    nQ, nK = Sq // block_q, Sk // block_k
+    scale = softmax_scale if softmax_scale is not None else h ** -0.5
+
+    kernel = functools.partial(
+        _attn_kernel, softmax_scale=scale, causal=causal,
+        block_q=block_q, block_k=block_k, num_k_blocks=nK)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(B, nq, nQ, nK),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, h),
+                         lambda b, qh, qi, ki: (b, qh, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, h),
+                         lambda b, qh, qi, ki: (b, qh // group, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, h),
+                         lambda b, qh, qi, ki: (b, qh // group, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, h),
+                               lambda b, qh, qi, ki: (b, qh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, nq, Sq, h), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, h), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,38 @@
+"""Public flash-attention op: jit'd wrapper with CPU-interpret fallback.
+
+``flash_attention(q, k, v)`` takes the models' (B, S, heads, h) layout,
+transposes to the kernel's (B, heads, S, h), and dispatches to the Pallas
+kernel — ``interpret=True`` automatically off-TPU so the same call works
+in tests/CPU smoke runs and compiles to the real kernel on TPU.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:
+        return False
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True,
+                    softmax_scale: Optional[float] = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: Optional[bool] = None) -> jax.Array:
+    """q: (B, Sq, nq, h); k, v: (B, Sk, nkv, h) -> (B, Sq, nq, h)."""
+    interp = (not _on_tpu()) if interpret is None else interpret
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    out = flash_attention_kernel(
+        qt, kt, vt, causal=causal, softmax_scale=softmax_scale,
+        block_q=block_q, block_k=block_k, interpret=interp)
+    return jnp.swapaxes(out, 1, 2)

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the flash-attention kernel (GQA, optional causal)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+import jax
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  causal: bool = True,
+                  softmax_scale: Optional[float] = None) -> jnp.ndarray:
+    """q: (B, nq, Sq, h); k, v: (B, nkv, Sk, h); nq % nkv == 0.
+
+    Materializes the full (Sq, Sk) score matrix — the memory-bound baseline
+    the kernel replaces.  Float32 softmax, output in q.dtype.
+    """
+    B, nq, Sq, h = q.shape
+    nkv, Sk = k.shape[1], k.shape[2]
+    assert nq % nkv == 0, (nq, nkv)
+    g = nq // nkv
+    scale = softmax_scale if softmax_scale is not None else h ** -0.5
+    qg = q.reshape(B, nkv, g, Sq, h).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bkgsh,bkth->bkgst", qg, kf) * scale
+    if causal:
+        mask = jnp.arange(Sk)[None, :] <= jnp.arange(Sq)[:, None]
+        scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,bkth->bkgsh", w, vf)
+    return out.reshape(B, nq, Sq, h).astype(q.dtype)

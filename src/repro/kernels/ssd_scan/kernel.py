@@ -1,0 +1,117 @@
+"""Mamba2 SSD chunked-scan Pallas TPU kernel.
+
+TPU adaptation of the SSD algorithm (arXiv:2405.21060 §6).  The GPU
+implementation leans on warp-level primitives for the intra-chunk scan;
+on TPU we restructure the whole computation as chunk-local *matmuls*
+(MXU) plus a sequential inter-chunk state carry in VMEM scratch:
+
+* Grid ``(B, H, NC)`` — NC (chunks) is the innermost, sequential TPU grid
+  dimension; the (N, P) SSM state lives in VMEM scratch and carries from
+  chunk c to c+1 (zero-initialized at c == 0 of every (b, h)).
+* Per chunk, everything is dense linear algebra on (Q, ·) tiles:
+    s        = cumsum(dt * A)                    (Q,)    VPU
+    CB       = C · Bᵀ                            (Q, Q)  MXU
+    M        = CB ⊙ exp(s_i - s_j) ⊙ dt_j  (causal)      VPU
+    y_intra  = M · x                             (Q, P)  MXU
+    y_inter  = (C ⊙ exp(s)) · h_prev             (Q, P)  MXU
+    h_new    = exp(s_Q) h_prev + Bᵀ·(decay⊙dt⊙x) (N, P)  MXU
+* Q (chunk) and P (head dim) are 64/128 — MXU-aligned; state N ∈ {64,128}.
+
+VMEM per step: x,y (Q·P) + B,C (Q·N) + state (N·P) floats — KBs, far
+under the ~16 MB/core budget, leaving room for double buffering.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, hout_ref,
+                h_scr, *, chunk: int, num_chunks: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)          # (Q, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)           # (Q,)
+    A = a_ref[0].astype(jnp.float32)                   # scalar
+    Bm = b_ref[0].astype(jnp.float32)                  # (Q, N)
+    Cm = c_ref[0].astype(jnp.float32)                  # (Q, N)
+
+    s = jnp.cumsum(dt * A)                             # (Q,) inclusive
+    # intra-chunk: M[i,j] = (C_i·B_j) exp(s_i - s_j) dt_j  for j <= i
+    CB = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (Q, Q)
+    L = s[:, None] - s[None, :]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    M = jnp.where(cols <= rows, CB * jnp.exp(L) * dt[None, :], 0.0)
+    y = jax.lax.dot_general(M, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # (Q, P)
+
+    # inter-chunk: y += (C ⊙ exp(s)) · h_prev
+    h_prev = h_scr[...]                                # (N, P)
+    y = y + jax.lax.dot_general(Cm * jnp.exp(s)[:, None], h_prev,
+                                (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+
+    # state update: h = exp(s_Q) h_prev + Bᵀ · (decay_to_end ⊙ dt ⊙ x)
+    decay_end = jnp.exp(s[-1] - s)                     # (Q,)
+    w = (decay_end * dt)[:, None] * x                  # (Q, P)
+    st = jax.lax.dot_general(Bm, w, (((0,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (N, P)
+    h_new = jnp.exp(s[-1]) * h_prev + st
+    h_scr[...] = h_new
+
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == num_chunks - 1)
+    def _emit_state():
+        hout_ref[0, 0] = h_new.astype(hout_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan_kernel(x: jax.Array, dt: jax.Array, A: jax.Array,
+                    Bm: jax.Array, Cm: jax.Array, *, chunk: int = 64,
+                    interpret: bool = False
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B,S,H,P); dt: (B,S,H); A: (H,); Bm, Cm: (B,S,N).
+
+    Returns (y (B,S,H,P) f32, final state (B,H,N,P) f32).  S % chunk == 0
+    (the ops wrapper pads with dt=0 steps, which are state-neutral).
+    """
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    NC = S // chunk
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk, num_chunks=NC)
+    y, h = pl.pallas_call(
+        kernel,
+        grid=(B, H, NC),
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda b, h, c: (b, c, h)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, c: (b, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, 1, N, P), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, H, P), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, N, P), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, Bm, Cm)
+    return y, h

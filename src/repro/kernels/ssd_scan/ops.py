@@ -1,0 +1,36 @@
+"""Public SSD-scan op: padding + dispatch + CPU-interpret fallback."""
+from __future__ import annotations
+
+from typing import Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.kernel import ssd_scan_kernel
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:
+        return False
+
+
+def ssd_scan(x: jax.Array, dt: jax.Array, A: jax.Array,
+             Bm: jax.Array, Cm: jax.Array, *, chunk: int = 64,
+             return_final: bool = False,
+             interpret: Optional[bool] = None
+             ) -> Union[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Same contract as repro.models.mamba2.ssd_chunked (the oracle)."""
+    interp = (not _on_tpu()) if interpret is None else interpret
+    B, S, H, P = x.shape
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:                       # dt = 0 -> exp(0·A) = 1: state-neutral
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    y, h = ssd_scan_kernel(x, dt, A, Bm, Cm, chunk=Q, interpret=interp)
+    y = y[:, :S]
+    return (y, h) if return_final else y

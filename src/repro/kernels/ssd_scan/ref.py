@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the SSD chunked-scan kernel.
+
+Delegates to the model's own chunked SSD implementation
+(repro.models.mamba2.ssd_chunked) — a single source of truth for the SSD
+semantics: h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t^T, y_t = C_t · h_t.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.mamba2 import ssd_chunked
+
+
+def ssd_ref(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+            Bm: jnp.ndarray, Cm: jnp.ndarray, *, chunk: int = 64,
+            return_final: bool = False):
+    """x: (B,S,H,P); dt: (B,S,H) post-softplus; A: (H,) negative;
+    Bm, Cm: (B,S,N).  Returns y (B,S,H,P) [, final state (B,H,N,P)]."""
+    return ssd_chunked(x.astype(jnp.float32), dt.astype(jnp.float32),
+                       A.astype(jnp.float32), Bm.astype(jnp.float32),
+                       Cm.astype(jnp.float32), chunk,
+                       return_final=return_final)

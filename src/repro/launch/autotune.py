@@ -1,0 +1,91 @@
+"""Per-cell distribution auto-tuner.
+
+The §Perf hillclimb showed the best option set is cell-dependent (SP wins
+on every dense/MoE train cell, is neutral-to-negative on SSM prefill).
+This tool reads every dry-run artifact variant produced for a cell and
+emits the recommended configuration per (arch × shape × mesh) — the
+roofline-bound-minimizing variant — as JSON the launcher can consume.
+
+    python -m repro.launch.autotune                 # report
+    python -m repro.launch.autotune --write plan.json
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import re
+from typing import Dict, List, Tuple
+
+VARIANT_DIRS = {
+    "baseline": "artifacts/dryrun",
+    "seq_shard": "artifacts/dryrun_final",
+}
+
+
+def bound_seconds(rec: dict) -> float:
+    r = rec["roofline"]
+    return max(r["compute_s"], r["memory_s"], r["collective_s"])
+
+
+def load_variants() -> Dict[Tuple[str, str, str], Dict[str, dict]]:
+    cells: Dict[Tuple[str, str, str], Dict[str, dict]] = {}
+    for variant, d in VARIANT_DIRS.items():
+        for path in glob.glob(os.path.join(d, "*.json")):
+            name = os.path.basename(path)
+            if "__opt-" in name and variant == "baseline":
+                # ad-hoc per-iteration artifacts: label by their options
+                m = re.search(r"__opt-([\w\-]+)\.json$", name)
+                label = m.group(1) if m else variant
+            else:
+                label = variant
+            with open(path) as f:
+                rec = json.load(f)
+            if rec.get("status") != "ok":
+                continue
+            key = (rec["arch"], rec["shape"], rec["mesh"])
+            cells.setdefault(key, {})[label] = rec
+    return cells
+
+
+def plan(cells) -> List[dict]:
+    out = []
+    for (arch, shape, mesh), variants in sorted(cells.items()):
+        best = min(variants, key=lambda v: bound_seconds(variants[v]))
+        base = variants.get("baseline")
+        rec = variants[best]
+        out.append({
+            "arch": arch, "shape": shape, "mesh": mesh,
+            "recommended": best,
+            "bound_s": bound_seconds(rec),
+            "baseline_bound_s": bound_seconds(base) if base else None,
+            "speedup": (bound_seconds(base) / bound_seconds(rec)
+                        if base and bound_seconds(rec) > 0 else 1.0),
+            "bottleneck": rec["roofline"]["bottleneck"],
+        })
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--write", default="")
+    args = ap.parse_args()
+    cells = load_variants()
+    p = plan(cells)
+    for row in p:
+        print(f"{row['arch']:22s} {row['shape']:12s} {row['mesh']:11s} "
+              f"-> {row['recommended']:12s} bound={row['bound_s']:8.3f}s "
+              f"speedup={row['speedup']:.2f}x [{row['bottleneck']}]")
+    if p:
+        mean = sum(r["speedup"] for r in p) / len(p)
+        print(f"\nmean speedup with per-cell tuning: {mean:.2f}x "
+              f"over {len(p)} cells")
+    if args.write:
+        with open(args.write, "w") as f:
+            json.dump(p, f, indent=1)
+        print(f"wrote {args.write}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,217 @@
+"""Cell assembly: (architecture x input shape x mesh) -> lowerable step.
+
+``build_cell`` returns the jitted-with-shardings callable plus abstract
+inputs for exactly what would run on the real cluster:
+
+  * ``train_*``   -> the full train step (fwd + bwd + AdamW update),
+  * ``prefill_*`` -> the prefill function (prompt -> primed KV cache),
+  * ``decode_*`` / ``long_*`` -> one serve_step token with a seq_len cache.
+
+Used by the multi-pod dry-run, the roofline benchmark and the launcher —
+one source of truth for distribution config.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro.configs import SHAPES, get as get_config, shape_applicable
+from repro.configs.base import ArchConfig, RunConfig, ShapeConfig
+from repro.distributed import axes as ax
+from repro.models.api import ModelBundle, build_model
+from repro.optim.adamw import AdamWState
+from repro.training.trainer import TrainState, make_train_step
+from repro.optim.schedule import warmup_cosine
+
+Pytree = Any
+
+
+# ---------------------------------------------------------------------------
+# axes-tree -> NamedSharding-tree
+# ---------------------------------------------------------------------------
+
+def _is_axes_leaf(x) -> bool:
+    return x is None or (
+        isinstance(x, tuple) and not hasattr(x, "_fields")
+        and all(a is None or isinstance(a, str) for a in x))
+
+
+def shardings_from_axes(axes_tree: Pytree, abstract_tree: Pytree,
+                        mesh: Mesh, rules=None) -> Pytree:
+    ax_leaves = jax.tree.flatten(axes_tree, is_leaf=_is_axes_leaf)[0]
+    abs_leaves, treedef = jax.tree.flatten(abstract_tree)
+    assert len(ax_leaves) == len(abs_leaves), (len(ax_leaves), len(abs_leaves))
+    out = []
+    for axs, leaf in zip(ax_leaves, abs_leaves):
+        spec = (PartitionSpec() if axs is None
+                else ax.spec_for(axs, leaf.shape, mesh, rules))
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree.unflatten(treedef, out)
+
+
+def rules_for_shape(shape: ShapeConfig,
+                    cfg: Optional[ArchConfig] = None,
+                    mesh: Optional[Mesh] = None) -> Dict[str, Any]:
+    rules = dict(ax.DEFAULT_RULES)
+    if shape.seq_len >= 262_144:
+        # long-context serving: the KV/state cache is the dominant tensor
+        # and batch=1 leaves 'data' idle -> shard the cache seq dim on it.
+        rules["kv_seq"] = ("pod", "data")
+    elif (cfg is not None and mesh is not None
+          and shape.kind in ("prefill", "decode") and cfg.n_kv_heads):
+        # GQA head-count fallback: when kv_heads doesn't divide the model
+        # axis the cache would replicate across it (e.g. internvl2's 8 KV
+        # heads on a 16-way axis: 412 GB cache -> 26 GB/device).  Shard
+        # the cache seq dim on 'model' instead — attention contracts over
+        # seq, so GSPMD lowers it to a flash-decode-style partial softmax
+        # with two tiny all-reduces per layer.
+        if cfg.n_kv_heads % mesh.shape["model"] != 0:
+            rules["kv_seq"] = "model"
+            rules["kv_heads"] = None
+    return rules
+
+
+# ---------------------------------------------------------------------------
+# abstract state + shardings per cell kind
+# ---------------------------------------------------------------------------
+
+def abstract_train_state(model: ModelBundle) -> TrainState:
+    params = model.abstract_params()
+    f32 = jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), params)
+    i32 = jax.ShapeDtypeStruct((), jnp.int32)
+    return TrainState(params=params,
+                      opt=AdamWState(step=i32, mu=f32, nu=f32),
+                      residual=None, step=i32)
+
+
+def train_state_shardings(model: ModelBundle, mesh: Mesh,
+                          rules=None) -> TrainState:
+    pspecs = model.param_partition_specs()     # resolved under use_rules
+    sh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs)
+    scalar = NamedSharding(mesh, PartitionSpec())
+    return TrainState(params=sh,
+                      opt=AdamWState(step=scalar, mu=sh, nu=sh),
+                      residual=None, step=scalar)
+
+
+@dataclasses.dataclass
+class Cell:
+    """Everything needed to lower one (arch x shape x mesh) combination."""
+    arch: str
+    shape: ShapeConfig
+    kind: str                      # train | prefill | decode
+    fn: Callable                   # jit-wrapped with shardings
+    args: Tuple[Pytree, ...]       # abstract inputs
+    mesh: Mesh
+    rules: Dict[str, Any]
+    model: ModelBundle
+    options: Dict[str, bool] = dataclasses.field(default_factory=dict)
+
+    def lower(self):
+        with ax.use_rules(self.mesh, self.rules, self.options):
+            return self.fn.lower(*self.args)
+
+
+def build_cell(arch: str, shape_name: str, mesh: Mesh, *,
+               run: Optional[RunConfig] = None,
+               cfg: Optional[ArchConfig] = None,
+               donate: bool = True,
+               options: Optional[Dict[str, bool]] = None) -> Cell:
+    """Assemble the lowerable step for one cell (raises if inapplicable).
+
+    ``options`` are beyond-paper optimizations (EXPERIMENTS.md §Perf):
+      * ``gather_weights`` — ZeRO-3-style FSDP gather-at-use;
+      * ``seq_shard``      — sequence parallelism: residual-stream
+        activations sharded on 'model' between blocks.
+    """
+    shape = SHAPES[shape_name]
+    cfg = cfg if cfg is not None else get_config(arch)
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        raise ValueError(f"{arch} x {shape_name}: {why}")
+    # production numerics: bf16 params/compute, f32 optimizer moments
+    cfg = cfg.replace(param_dtype="bfloat16", compute_dtype="bfloat16")
+    run = run or RunConfig(arch=arch, shape=shape_name)
+    options = dict(options or {})
+    rules = rules_for_shape(shape, cfg, mesh)
+    if options.get("seq_shard"):
+        # Megatron-style sequence parallelism: ONLY the residual stream
+        # between blocks is seq-sharded on 'model' (AG at attention/MLP
+        # entry, RS at exit); interiors keep heads/mlp tensor parallelism.
+        rules["res_seq"] = "model"
+    model = build_model(cfg, moe_strategy=(
+        "sort" if options.get("moe_sort") else "einsum"))
+    # modality frontends prepend patch/frame positions to the decoder
+    # sequence: the serve cache must hold them too
+    extra_ctx = cfg.frontend_len if cfg.family == "vlm" else 0
+
+    with ax.use_rules(mesh, rules, options):
+        if shape.kind == "train":
+            lr_fn = warmup_cosine(run.learning_rate, run.warmup_steps,
+                                  run.total_steps)
+            step_fn = make_train_step(model, run, lr_fn)
+            state = abstract_train_state(model)
+            state_sh = train_state_shardings(model, mesh, rules)
+            batch = model.input_specs(shape)
+            batch_sh = shardings_from_axes(
+                model.input_logical_axes(shape), batch, mesh, rules)
+            scalar = NamedSharding(mesh, PartitionSpec())
+            fn = jax.jit(step_fn,
+                         in_shardings=(state_sh, batch_sh),
+                         out_shardings=(state_sh, scalar),
+                         donate_argnums=(0,) if donate else ())
+            return Cell(arch, shape, "train", fn, (state, batch), mesh,
+                        rules, model, options)
+
+        params = model.abstract_params()
+        param_sh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                                model.param_partition_specs())
+
+        if shape.kind == "prefill":
+            batch = model.input_specs(shape)
+            batch_sh = shardings_from_axes(
+                model.input_logical_axes(shape), batch, mesh, rules)
+            max_len = shape.seq_len + extra_ctx
+            cache_abs = model.cache_specs(shape.global_batch, max_len)
+            dec_shape = dataclasses.replace(shape, kind="decode")
+            cache_ax = model.input_logical_axes(dec_shape)["cache"]
+            cache_sh = shardings_from_axes(cache_ax, cache_abs, mesh, rules)
+            logits_sh = NamedSharding(
+                mesh, ax.spec_for(("batch", None, "vocab"),
+                                  (shape.global_batch, 1, cfg.vocab_size),
+                                  mesh, rules))
+
+            def prefill_fn(p, b):
+                return model.prefill(p, b, max_len)
+
+            fn = jax.jit(prefill_fn,
+                         in_shardings=(param_sh, batch_sh),
+                         out_shardings=(logits_sh, cache_sh))
+            return Cell(arch, shape, "prefill", fn, (params, batch), mesh,
+                        rules, model, options)
+
+        # decode: one new token against a seq_len cache
+        inputs = model.input_specs(shape)
+        tokens, cache_abs = inputs["tokens"], inputs["cache"]
+        in_ax = model.input_logical_axes(shape)
+        tok_sh = shardings_from_axes(in_ax["tokens"], tokens, mesh, rules)
+        cache_sh = shardings_from_axes(in_ax["cache"], cache_abs, mesh, rules)
+        logits_sh = NamedSharding(
+            mesh, ax.spec_for(("batch", None, "vocab"),
+                              (shape.global_batch, 1, cfg.vocab_size),
+                              mesh, rules))
+
+        def serve_step(p, cache, tok):
+            return model.decode_step(p, cache, tok)
+
+        fn = jax.jit(serve_step,
+                     in_shardings=(param_sh, cache_sh, tok_sh),
+                     out_shardings=(logits_sh, cache_sh),
+                     donate_argnums=(1,) if donate else ())
+        return Cell(arch, shape, "decode", fn, (params, cache_abs, tokens),
+                    mesh, rules, model, options)

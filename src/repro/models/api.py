@@ -1,0 +1,162 @@
+"""Uniform model API: ``build_model(cfg)`` -> ``ModelBundle``.
+
+Every architecture family exposes the same five entry points (init,
+train_loss, prefill, decode_step, init_cache) plus abstract input specs so
+the launcher, trainer, serving engine, dry-run and ScalAna all work over any
+assigned architecture unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import encdec, hybrid, ssm_lm, transformer
+from repro.models.params import (
+    Specs,
+    abstract_params,
+    init_params,
+    param_count,
+    param_specs_tree,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelBundle:
+    cfg: ArchConfig
+    specs: Specs
+    init: Callable[[jax.Array], Any]
+    train_loss: Callable[..., Tuple[jax.Array, Dict[str, jax.Array]]]
+    prefill: Callable[..., Tuple[jax.Array, Any]]
+    decode_step: Callable[..., Tuple[jax.Array, Any]]
+    init_cache: Callable[[int, int], Any]
+    cache_specs: Callable[[int, int], Any]
+
+    def abstract_params(self):
+        return abstract_params(self.specs, self.cfg.pdtype())
+
+    def param_partition_specs(self):
+        return param_specs_tree(self.specs)
+
+    def param_count(self) -> int:
+        return param_count(self.specs)
+
+    # ------------------------------------------------------------------
+    # Abstract inputs for one (arch x shape) cell — used by the dry-run.
+    # Token batches carry S+1 tokens for train (inputs/labels shift).
+    # ------------------------------------------------------------------
+    def input_specs(self, shape: ShapeConfig) -> Dict[str, Any]:
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        tok = jnp.int32
+        emb = cfg.cdtype()
+        if shape.kind == "train":
+            batch = {"tokens": jax.ShapeDtypeStruct((B, S + 1), tok)}
+            if cfg.family == "encdec":
+                batch["frames"] = jax.ShapeDtypeStruct(
+                    (B, cfg.frontend_len, cfg.d_model), emb)
+            if cfg.family == "vlm":
+                batch["patches"] = jax.ShapeDtypeStruct(
+                    (B, cfg.frontend_len, cfg.d_model), emb)
+            return batch
+        if shape.kind == "prefill":
+            batch = {"tokens": jax.ShapeDtypeStruct((B, S), tok)}
+            if cfg.family == "encdec":
+                batch["frames"] = jax.ShapeDtypeStruct(
+                    (B, cfg.frontend_len, cfg.d_model), emb)
+            if cfg.family == "vlm":
+                batch["patches"] = jax.ShapeDtypeStruct(
+                    (B, cfg.frontend_len, cfg.d_model), emb)
+            return batch
+        # decode: one token + primed cache of length S
+        return {
+            "tokens": jax.ShapeDtypeStruct((B, 1), tok),
+            "cache": self.cache_specs(B, S),
+        }
+
+    def input_logical_axes(self, shape: ShapeConfig) -> Dict[str, Any]:
+        """Logical axes matching input_specs (resolved by the launcher)."""
+        cfg = self.cfg
+        axes: Dict[str, Any] = {"tokens": ("batch", "seq")}
+        if shape.kind != "decode":
+            if cfg.family == "encdec":
+                axes["frames"] = ("batch", "frontend", "embed")
+            if cfg.family == "vlm":
+                axes["patches"] = ("batch", "frontend", "embed")
+            return axes
+        cache_ax = jax.tree.map(lambda _: None, self.cache_specs(1, 2))
+        kv_axes = ("layers", "batch", "kv_seq", "kv_heads", None)
+        if cfg.family in ("dense", "moe", "vlm"):
+            cache_ax = transformer.LMCache(
+                type(cache_ax.kv)(kv_axes, kv_axes, ("batch",)))
+        elif cfg.family == "encdec":
+            cross = ("layers", "batch", "frontend", "kv_heads", None)
+            cache_ax = encdec.EncDecCache(
+                type(cache_ax.self_kv)(kv_axes, kv_axes, ("batch",)),
+                cross, cross)
+        elif cfg.family == "ssm":
+            cache_ax = ssm_lm.SSMCache(
+                type(cache_ax.ssm)(("layers", "batch", None, "ssm_inner"),
+                                   ("layers", "batch", "ssm_heads", None, None)),
+                ("batch",))
+        elif cfg.family == "hybrid":
+            site_kv = (None, "batch", "kv_seq", "kv_heads", None)
+            cache_ax = hybrid.HybridCache(
+                type(cache_ax.ssm)(("layers", "batch", None, "ssm_inner"),
+                                   ("layers", "batch", "ssm_heads", None, None)),
+                site_kv, site_kv, ("batch",))
+        return {"tokens": ("batch", None), "cache": cache_ax}
+
+
+def build_model(cfg: ArchConfig, moe_strategy: str = "einsum") -> ModelBundle:
+    pdt, cdt = cfg.pdtype(), cfg.cdtype()
+    if cfg.family in ("dense", "moe", "vlm"):
+        specs = transformer.lm_specs(cfg)
+        return ModelBundle(
+            cfg=cfg, specs=specs,
+            init=lambda key: init_params(specs, key, pdt),
+            train_loss=functools.partial(transformer.train_loss, cfg,
+                                         moe_strategy=moe_strategy),
+            prefill=functools.partial(transformer.prefill, cfg),
+            decode_step=functools.partial(transformer.decode_step, cfg),
+            init_cache=lambda b, s: transformer.init_cache(cfg, b, s, cdt),
+            cache_specs=lambda b, s: transformer.cache_specs(cfg, b, s, cdt),
+        )
+    if cfg.family == "ssm":
+        specs = ssm_lm.ssm_lm_specs(cfg)
+        return ModelBundle(
+            cfg=cfg, specs=specs,
+            init=lambda key: init_params(specs, key, pdt),
+            train_loss=functools.partial(ssm_lm.train_loss, cfg),
+            prefill=functools.partial(ssm_lm.prefill, cfg),
+            decode_step=functools.partial(ssm_lm.decode_step, cfg),
+            init_cache=lambda b, s: ssm_lm.init_cache(cfg, b, s, cdt),
+            cache_specs=lambda b, s: ssm_lm.cache_specs(cfg, b, s, cdt),
+        )
+    if cfg.family == "hybrid":
+        specs = hybrid.hybrid_specs(cfg)
+        return ModelBundle(
+            cfg=cfg, specs=specs,
+            init=lambda key: init_params(specs, key, pdt),
+            train_loss=functools.partial(hybrid.train_loss, cfg),
+            prefill=functools.partial(hybrid.prefill, cfg),
+            decode_step=functools.partial(hybrid.decode_step, cfg),
+            init_cache=lambda b, s: hybrid.init_cache(cfg, b, s, cdt),
+            cache_specs=lambda b, s: hybrid.cache_specs(cfg, b, s, cdt),
+        )
+    if cfg.family == "encdec":
+        specs = encdec.encdec_specs(cfg)
+        return ModelBundle(
+            cfg=cfg, specs=specs,
+            init=lambda key: init_params(specs, key, pdt),
+            train_loss=functools.partial(encdec.train_loss, cfg),
+            prefill=functools.partial(encdec.prefill, cfg),
+            decode_step=functools.partial(encdec.decode_step, cfg),
+            init_cache=lambda b, s: encdec.init_cache(cfg, b, s, cdt),
+            cache_specs=lambda b, s: encdec.cache_specs(cfg, b, s, cdt),
+        )
+    raise ValueError(f"unknown family {cfg.family!r}")

@@ -1,0 +1,198 @@
+"""Encoder-decoder transformer backbone (seamless-m4t family).
+
+The modality frontend is a stub: the encoder consumes precomputed frame
+embeddings (B, T, D).  The decoder is a causal transformer with
+cross-attention; decode caches both self-attn KV and per-layer projected
+cross-attn KV of the encoder output.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.axes import logical_constraint
+from repro.models import attention as attn
+from repro.models.layers import (
+    chunked_cross_entropy,
+    embed_specs,
+    embed_tokens,
+    logits_for,
+    mlp_apply,
+    mlp_specs,
+    rms_norm,
+)
+from repro.models.params import P, Specs
+from repro.models.transformer import stack_specs
+
+
+def encdec_specs(cfg: ArchConfig) -> Specs:
+    enc_layer = {
+        "attn_norm": P((cfg.d_model,), ("embed",), init="zeros"),
+        "attn": attn.attention_specs(cfg),
+        "mlp_norm": P((cfg.d_model,), ("embed",), init="zeros"),
+        "mlp": mlp_specs(cfg),
+    }
+    dec_layer = {
+        "self_norm": P((cfg.d_model,), ("embed",), init="zeros"),
+        "self_attn": attn.attention_specs(cfg),
+        "cross_norm": P((cfg.d_model,), ("embed",), init="zeros"),
+        "cross_attn": attn.attention_specs(cfg),
+        "mlp_norm": P((cfg.d_model,), ("embed",), init="zeros"),
+        "mlp": mlp_specs(cfg),
+    }
+    return {
+        "embed": embed_specs(cfg),
+        "encoder": stack_specs(enc_layer, cfg.enc_layers),
+        "decoder": stack_specs(dec_layer, cfg.n_layers),
+        "enc_norm": P((cfg.d_model,), ("embed",), init="zeros"),
+        "final_norm": P((cfg.d_model,), ("embed",), init="zeros"),
+    }
+
+
+def encode(cfg: ArchConfig, params: Dict[str, Any],
+           frames: jax.Array) -> jax.Array:
+    """frames: (B, T, D) precomputed embeddings -> encoder output (B, T, D)."""
+    def block(x, p):
+        h = x + attn.attention_train(cfg, p["attn"],
+                                     rms_norm(x, p["attn_norm"], cfg.norm_eps),
+                                     causal=False)
+        out = h + mlp_apply(cfg, p["mlp"],
+                            rms_norm(h, p["mlp_norm"], cfg.norm_eps))
+        return logical_constraint(out, "batch", "res_seq", "embed")
+
+    blk = jax.checkpoint(block) if cfg.remat else block
+
+    def body(carry, p):
+        return blk(carry, p), None
+
+    h, _ = jax.lax.scan(body, frames, params["encoder"])
+    return rms_norm(h, params["enc_norm"], cfg.norm_eps)
+
+
+def _dec_block_train(cfg: ArchConfig, enc_out: jax.Array, x: jax.Array,
+                     p: Dict[str, Any]) -> jax.Array:
+    h = x + attn.attention_train(cfg, p["self_attn"],
+                                 rms_norm(x, p["self_norm"], cfg.norm_eps))
+    h = h + attn.cross_attention_train(
+        cfg, p["cross_attn"], rms_norm(h, p["cross_norm"], cfg.norm_eps),
+        enc_out)
+    out = h + mlp_apply(cfg, p["mlp"], rms_norm(h, p["mlp_norm"], cfg.norm_eps))
+    return logical_constraint(out, "batch", "res_seq", "embed")
+
+
+def train_loss(cfg: ArchConfig, params: Dict[str, Any],
+               batch: Dict[str, jax.Array]
+               ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    tokens = batch["tokens"]
+    inputs, labels = tokens[:, :-1], tokens[:, 1:]
+    enc_out = encode(cfg, params, batch["frames"].astype(
+        params["final_norm"].dtype))
+    x = embed_tokens(params["embed"], inputs)
+    block = functools.partial(_dec_block_train, cfg, enc_out)
+    blk = jax.checkpoint(block) if cfg.remat else block
+
+    def body(carry, p):
+        return blk(carry, p), None
+
+    h, _ = jax.lax.scan(body, x, params["decoder"])
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    mask = (labels >= 0).astype(jnp.float32)
+    loss_sum, count = chunked_cross_entropy(
+        params["embed"], h, jnp.maximum(labels, 0), mask, cfg.loss_chunk)
+    loss = loss_sum / jnp.maximum(count, 1.0)
+    return loss, {"ce_loss": loss, "loss": loss, "tokens": count}
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+class EncDecCache(NamedTuple):
+    self_kv: attn.KVCache      # (L, B, S_max, n_kv, h)
+    cross_k: jax.Array         # (L, B, T, n_kv, h) — projected encoder output
+    cross_v: jax.Array
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype) -> EncDecCache:
+    h = cfg.resolved_head_dim()
+    cross = (cfg.n_layers, batch, cfg.frontend_len, cfg.n_kv_heads, h)
+    return EncDecCache(
+        attn.init_kv_cache(cfg, batch, max_len, cfg.n_layers, dtype),
+        jnp.zeros(cross, dtype), jnp.zeros(cross, dtype))
+
+
+def cache_specs(cfg: ArchConfig, batch: int, max_len: int, dtype) -> EncDecCache:
+    h = cfg.resolved_head_dim()
+    cross = (cfg.n_layers, batch, cfg.frontend_len, cfg.n_kv_heads, h)
+    return EncDecCache(
+        attn.kv_cache_specs(cfg, batch, max_len, cfg.n_layers, dtype),
+        jax.ShapeDtypeStruct(cross, dtype), jax.ShapeDtypeStruct(cross, dtype))
+
+
+def prefill(cfg: ArchConfig, params: Dict[str, Any],
+            batch: Dict[str, jax.Array], max_len: int
+            ) -> Tuple[jax.Array, EncDecCache]:
+    """Encode frames + run decoder over the prompt, priming both caches."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    dtype = params["final_norm"].dtype
+    enc_out = encode(cfg, params, batch["frames"].astype(dtype))
+    x = embed_tokens(params["embed"], tokens)
+    hd = cfg.resolved_head_dim()
+    T = enc_out.shape[1]
+
+    def body(carry, p):
+        x = carry
+        xn = rms_norm(x, p["self_norm"], cfg.norm_eps)
+        positions = jnp.arange(S)[None, :]
+        q, k, v = attn.qkv(cfg, p["self_attn"], xn, positions)
+        o = attn.attend(q, k, v, causal=True, softmax_scale=hd ** -0.5)
+        h = x + o.reshape(B, S, -1) @ attn.wo_matrix(p["self_attn"])
+        h = h + attn.cross_attention_train(
+            cfg, p["cross_attn"], rms_norm(h, p["cross_norm"], cfg.norm_eps),
+            enc_out)
+        out = h + mlp_apply(cfg, p["mlp"],
+                            rms_norm(h, p["mlp_norm"], cfg.norm_eps))
+        ck = (enc_out @ p["cross_attn"]["wk"]).reshape(B, T, cfg.n_kv_heads, hd)
+        cv = (enc_out @ p["cross_attn"]["wv"]).reshape(B, T, cfg.n_kv_heads, hd)
+        pad = ((0, 0), (0, max_len - S), (0, 0), (0, 0))
+        return out, (jnp.pad(k, pad), jnp.pad(v, pad), ck, cv)
+
+    h, (ks, vs, cks, cvs) = jax.lax.scan(body, x, params["decoder"])
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = logits_for(params["embed"], h[:, -1:, :])
+    lengths = jnp.full((B,), S, jnp.int32)
+    return logits, EncDecCache(attn.KVCache(ks, vs, lengths), cks, cvs)
+
+
+def decode_step(cfg: ArchConfig, params: Dict[str, Any], cache: EncDecCache,
+                tokens: jax.Array) -> Tuple[jax.Array, EncDecCache]:
+    kv = cache.self_kv
+    x = embed_tokens(params["embed"], tokens)
+    hd = cfg.resolved_head_dim()
+
+    def body(carry, xs):
+        p, k_c, v_c, ck, cv = xs
+        xn = rms_norm(carry, p["self_norm"], cfg.norm_eps)
+        o, k_c, v_c = attn.attention_decode(cfg, p["self_attn"], xn,
+                                            k_c, v_c, kv.length)
+        h = carry + o
+        hn = rms_norm(h, p["cross_norm"], cfg.norm_eps)
+        B = hn.shape[0]
+        q = (hn @ p["cross_attn"]["wq"]).reshape(B, 1, cfg.n_heads, hd)
+        co = attn.gqa_attend(q, ck, cv, None, softmax_scale=hd ** -0.5)
+        h = h + co.reshape(B, 1, -1) @ p["cross_attn"]["wo"]
+        out = h + mlp_apply(cfg, p["mlp"],
+                            rms_norm(h, p["mlp_norm"], cfg.norm_eps))
+        return out, (k_c, v_c)
+
+    h, (ks, vs) = jax.lax.scan(
+        body, x, (params["decoder"], kv.k, kv.v, cache.cross_k, cache.cross_v))
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = logits_for(params["embed"], h)
+    return logits, EncDecCache(attn.KVCache(ks, vs, kv.length + 1),
+                               cache.cross_k, cache.cross_v)

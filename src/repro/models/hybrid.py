@@ -1,0 +1,236 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one shared attention block.
+
+The shared attention+MLP block (a single parameter set) is applied every
+``attn_every`` layers via ``lax.cond`` inside the layer scan — which shows up
+in the ScalAna PSG as a Branch vertex nested in the layer Loop, exactly the
+control structure the paper's backtracking walks through.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.axes import logical_constraint
+from repro.models import attention as attn
+from repro.models import mamba2
+from repro.models.layers import (
+    chunked_cross_entropy,
+    embed_specs,
+    embed_tokens,
+    logits_for,
+    mlp_apply,
+    mlp_specs,
+    rms_norm,
+)
+from repro.models.params import P, Specs
+from repro.models.transformer import stack_specs
+
+
+def n_attn_sites(cfg: ArchConfig) -> int:
+    return (cfg.n_layers + cfg.attn_every - 1) // cfg.attn_every
+
+
+def hybrid_specs(cfg: ArchConfig) -> Specs:
+    mamba_layer = {
+        "norm": P((cfg.d_model,), ("embed",), init="zeros"),
+        "ssd": mamba2.ssd_block_specs(cfg),
+    }
+    shared = {
+        "attn_norm": P((cfg.d_model,), ("embed",), init="zeros"),
+        "attn": attn.attention_specs(cfg),
+        "mlp_norm": P((cfg.d_model,), ("embed",), init="zeros"),
+        "mlp": mlp_specs(cfg),
+    }
+    return {
+        "embed": embed_specs(cfg),
+        "layers": stack_specs(mamba_layer, cfg.n_layers),
+        "shared": shared,
+        "final_norm": P((cfg.d_model,), ("embed",), init="zeros"),
+    }
+
+
+def _shared_block_train(cfg: ArchConfig, p: Dict[str, Any],
+                        x: jax.Array) -> jax.Array:
+    h = x + attn.attention_train(cfg, p["attn"],
+                                 rms_norm(x, p["attn_norm"], cfg.norm_eps))
+    return h + mlp_apply(cfg, p["mlp"],
+                         rms_norm(h, p["mlp_norm"], cfg.norm_eps))
+
+
+def backbone_train(cfg: ArchConfig, params: Dict[str, Any],
+                   x: jax.Array) -> jax.Array:
+    shared = params["shared"]
+
+    def block(x, layer_params, idx):
+        x = jax.lax.cond(idx % cfg.attn_every == 0,
+                         lambda v: _shared_block_train(cfg, shared, v),
+                         lambda v: v, x)
+        y = mamba2.ssd_block_train(cfg, layer_params["ssd"],
+                                   rms_norm(x, layer_params["norm"],
+                                            cfg.norm_eps))
+        out = x + y
+        return logical_constraint(out, "batch", "res_seq", "embed")
+
+    blk = jax.checkpoint(block) if cfg.remat else block
+
+    def body(carry, xs):
+        layer_params, idx = xs
+        return blk(carry, layer_params, idx), None
+
+    idxs = jnp.arange(cfg.n_layers)
+    h, _ = jax.lax.scan(body, x, (params["layers"], idxs))
+    return rms_norm(h, params["final_norm"], cfg.norm_eps)
+
+
+def train_loss(cfg: ArchConfig, params: Dict[str, Any],
+               batch: Dict[str, jax.Array]
+               ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    tokens = batch["tokens"]
+    inputs, labels = tokens[:, :-1], tokens[:, 1:]
+    x = embed_tokens(params["embed"], inputs)
+    h = backbone_train(cfg, params, x)
+    mask = (labels >= 0).astype(jnp.float32)
+    loss_sum, count = chunked_cross_entropy(
+        params["embed"], h, jnp.maximum(labels, 0), mask, cfg.loss_chunk)
+    loss = loss_sum / jnp.maximum(count, 1.0)
+    return loss, {"ce_loss": loss, "loss": loss, "tokens": count}
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+class HybridCache(NamedTuple):
+    ssm: mamba2.SSMState          # stacked (L, ...)
+    k: jax.Array                  # (sites, B, S_max, n_kv, h)
+    v: jax.Array
+    length: jax.Array             # (B,)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype) -> HybridCache:
+    sites = n_attn_sites(cfg)
+    h = cfg.resolved_head_dim()
+    kv_shape = (sites, batch, max_len, cfg.n_kv_heads, h)
+    return HybridCache(
+        mamba2.init_ssm_state(cfg, batch, cfg.n_layers, dtype),
+        jnp.zeros(kv_shape, dtype), jnp.zeros(kv_shape, dtype),
+        jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def cache_specs(cfg: ArchConfig, batch: int, max_len: int, dtype) -> HybridCache:
+    sites = n_attn_sites(cfg)
+    h = cfg.resolved_head_dim()
+    kv_shape = (sites, batch, max_len, cfg.n_kv_heads, h)
+    return HybridCache(
+        mamba2.ssm_state_specs(cfg, batch, cfg.n_layers, dtype),
+        jax.ShapeDtypeStruct(kv_shape, dtype),
+        jax.ShapeDtypeStruct(kv_shape, dtype),
+        jax.ShapeDtypeStruct((batch,), jnp.int32),
+    )
+
+
+def _shared_block_decode(cfg: ArchConfig, p: Dict[str, Any], x: jax.Array,
+                         k_site: jax.Array, v_site: jax.Array,
+                         lengths: jax.Array):
+    xn = rms_norm(x, p["attn_norm"], cfg.norm_eps)
+    o, k_site, v_site = attn.attention_decode(cfg, p["attn"], xn,
+                                              k_site, v_site, lengths)
+    h = x + o
+    h = h + mlp_apply(cfg, p["mlp"], rms_norm(h, p["mlp_norm"], cfg.norm_eps))
+    return h, k_site, v_site
+
+
+def decode_step(cfg: ArchConfig, params: Dict[str, Any], cache: HybridCache,
+                tokens: jax.Array) -> Tuple[jax.Array, HybridCache]:
+    shared = params["shared"]
+    x = embed_tokens(params["embed"], tokens)
+
+    def body(carry, xs):
+        x, kc, vc = carry
+        layer_params, conv_s, ssm_h, idx = xs
+        site = idx // cfg.attn_every
+
+        def with_attn(operand):
+            x, kc, vc = operand
+            ks = jax.lax.dynamic_index_in_dim(kc, site, 0, keepdims=False)
+            vs = jax.lax.dynamic_index_in_dim(vc, site, 0, keepdims=False)
+            x, ks, vs = _shared_block_decode(cfg, shared, x, ks, vs,
+                                             cache.length)
+            kc = jax.lax.dynamic_update_index_in_dim(kc, ks, site, 0)
+            vc = jax.lax.dynamic_update_index_in_dim(vc, vs, site, 0)
+            return x, kc, vc
+
+        x, kc, vc = jax.lax.cond(idx % cfg.attn_every == 0, with_attn,
+                                 lambda o: o, (x, kc, vc))
+        y, (conv_s, ssm_h) = mamba2.ssd_block_decode(
+            cfg, layer_params["ssd"],
+            rms_norm(x, layer_params["norm"], cfg.norm_eps), (conv_s, ssm_h))
+        return (x + y, kc, vc), (conv_s, ssm_h)
+
+    idxs = jnp.arange(cfg.n_layers)
+    (h, kc, vc), (conv_s, ssm_h) = jax.lax.scan(
+        body, (x, cache.k, cache.v),
+        (params["layers"], cache.ssm.conv, cache.ssm.h, idxs))
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = logits_for(params["embed"], h)
+    new_cache = HybridCache(mamba2.SSMState(conv_s, ssm_h), kc, vc,
+                            cache.length + 1)
+    return logits, new_cache
+
+
+def prefill(cfg: ArchConfig, params: Dict[str, Any],
+            batch: Dict[str, jax.Array], max_len: int
+            ) -> Tuple[jax.Array, HybridCache]:
+    """Chunked prefill: SSD chunk scan per layer + shared-attn KV capture."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = embed_tokens(params["embed"], tokens)
+    shared = params["shared"]
+    sites = n_attn_sites(cfg)
+    h = cfg.resolved_head_dim()
+    dtype = x.dtype
+    kbuf = jnp.zeros((sites, B, max_len, cfg.n_kv_heads, h), dtype)
+    vbuf = jnp.zeros_like(kbuf)
+
+    def body(carry, xs):
+        x, kbuf, vbuf = carry
+        layer_params, idx = xs
+        site = idx // cfg.attn_every
+
+        def with_attn(operand):
+            x, kbuf, vbuf = operand
+            xn = rms_norm(x, shared["attn_norm"], cfg.norm_eps)
+            positions = jnp.arange(S)[None, :]
+            q, k, v = attn.qkv(cfg, shared["attn"], xn, positions)
+            o = attn.attend(q, k, v, causal=True, softmax_scale=h ** -0.5)
+            hx = x + o.reshape(B, S, -1) @ attn.wo_matrix(shared["attn"])
+            hx = hx + mlp_apply(cfg, shared["mlp"],
+                                rms_norm(hx, shared["mlp_norm"], cfg.norm_eps))
+            pad = ((0, 0), (0, max_len - S), (0, 0), (0, 0))
+            kbuf = jax.lax.dynamic_update_index_in_dim(
+                kbuf, jnp.pad(k, pad), site, 0)
+            vbuf = jax.lax.dynamic_update_index_in_dim(
+                vbuf, jnp.pad(v, pad), site, 0)
+            return hx, kbuf, vbuf
+
+        x, kbuf, vbuf = jax.lax.cond(idx % cfg.attn_every == 0, with_attn,
+                                     lambda o: o, (x, kbuf, vbuf))
+        y, (conv_s, ssm_h) = mamba2.ssd_block_train(
+            cfg, layer_params["ssd"],
+            rms_norm(x, layer_params["norm"], cfg.norm_eps),
+            return_state=True)
+        return (x + y, kbuf, vbuf), (conv_s, ssm_h)
+
+    idxs = jnp.arange(cfg.n_layers)
+    (hx, kbuf, vbuf), (conv_s, ssm_h) = jax.lax.scan(
+        body, (x, kbuf, vbuf), (params["layers"], idxs))
+    hx = rms_norm(hx, params["final_norm"], cfg.norm_eps)
+    logits = logits_for(params["embed"], hx[:, -1:, :])
+    lengths = jnp.full((B,), S, jnp.int32)
+    cache = HybridCache(mamba2.SSMState(conv_s, ssm_h), kbuf, vbuf, lengths)
+    return logits, cache

@@ -1,0 +1,147 @@
+"""Shared neural-net primitives: norms, rotary embeddings, MLP variants."""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.axes import logical_constraint, weight_constraint
+from repro.models.params import P
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + weight.astype(jnp.float32))).astype(dt)
+
+
+def rotary_embedding(positions: jax.Array, head_dim: int, theta: float,
+                     dtype=jnp.float32) -> Tuple[jax.Array, jax.Array]:
+    """(positions...) -> cos/sin of shape positions.shape + (head_dim//2,)."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    angles = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(angles).astype(dtype), jnp.sin(angles).astype(dtype)
+
+
+def apply_rotary(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (..., S, n_heads, head_dim); cos/sin: (..., S, head_dim//2)."""
+    dt = x.dtype
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    c = cos[..., None, :].astype(jnp.float32)   # broadcast over heads
+    s = sin[..., None, :].astype(jnp.float32)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], -1).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# MLP variants
+# ---------------------------------------------------------------------------
+
+def mlp_specs(cfg: ArchConfig, d_ff: Optional[int] = None) -> Dict[str, P]:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    if cfg.mlp in ("swiglu", "geglu"):
+        return {
+            "w_gate": P((d, f), ("embed", "mlp")),
+            "w_up": P((d, f), ("embed", "mlp")),
+            "w_down": P((f, d), ("mlp", "embed")),
+        }
+    return {
+        "w_up": P((d, f), ("embed", "mlp")),
+        "w_down": P((f, d), ("mlp", "embed")),
+    }
+
+
+def mlp_apply(cfg: ArchConfig, p: Dict[str, jax.Array], x: jax.Array) -> jax.Array:
+    w_up = weight_constraint(p["w_up"], "embed", "mlp")
+    if cfg.mlp == "swiglu":
+        w_gate = weight_constraint(p["w_gate"], "embed", "mlp")
+        h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    elif cfg.mlp == "geglu":
+        w_gate = weight_constraint(p["w_gate"], "embed", "mlp")
+        h = jax.nn.gelu(x @ w_gate, approximate=True) * (x @ w_up)
+    elif cfg.mlp == "relu2":
+        h = jnp.square(jax.nn.relu(x @ w_up))
+    else:  # gelu
+        h = jax.nn.gelu(x @ w_up, approximate=True)
+    h = logical_constraint(h, "batch", "seq", "mlp")
+    return h @ weight_constraint(p["w_down"], "mlp", "embed")
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding with chunked cross-entropy
+# ---------------------------------------------------------------------------
+
+def embed_specs(cfg: ArchConfig) -> Dict[str, P]:
+    specs = {"embedding": P((cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                            init="embed")}
+    if not cfg.tie_embeddings:
+        specs["unembed"] = P((cfg.d_model, cfg.vocab_size), ("embed", "vocab"))
+    return specs
+
+
+def embed_tokens(p: Dict[str, jax.Array], tokens: jax.Array) -> jax.Array:
+    x = jnp.take(p["embedding"], tokens, axis=0)
+    # res_seq: sharded on 'model' under sequence parallelism (block
+    # boundaries only — attention/MLP interiors keep heads/mlp on model)
+    return logical_constraint(x, "batch", "res_seq", "embed")
+
+
+def unembed_matrix(p: Dict[str, jax.Array]) -> jax.Array:
+    if "unembed" in p:
+        w = p["unembed"]
+    else:
+        w = p["embedding"].T
+    return weight_constraint(w, "embed", "vocab")
+
+
+def logits_for(p: Dict[str, jax.Array], h: jax.Array) -> jax.Array:
+    logits = h @ unembed_matrix(p)
+    return logical_constraint(logits, "batch", "seq", "vocab")
+
+
+def chunked_cross_entropy(p: Dict[str, jax.Array], hidden: jax.Array,
+                          labels: jax.Array, mask: jax.Array,
+                          chunk: int) -> Tuple[jax.Array, jax.Array]:
+    """Cross-entropy without materializing (B, S, V): scan over seq chunks.
+
+    Returns (sum_loss, sum_count) as float32; caller divides.
+    The scan produces a PSG Loop vertex ("loss loop") and keeps the logits
+    working set to (B, chunk, V) — the key memory-term optimization for
+    256k-vocab architectures (DESIGN.md §4).
+    """
+    B, S, D = hidden.shape
+    chunk = min(chunk, S)
+    n = S // chunk
+    rem = S - n * chunk
+    w = unembed_matrix(p)
+
+    def one(h_c, y_c, m_c):
+        logits = (h_c @ w).astype(jnp.float32)
+        logits = logical_constraint(logits, "batch", "seq", "vocab")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(logits, y_c[..., None], axis=-1)[..., 0]
+        losses = (lse - picked) * m_c
+        return jnp.sum(losses), jnp.sum(m_c)
+
+    if n > 0:
+        hs = hidden[:, : n * chunk].reshape(B, n, chunk, D).swapaxes(0, 1)
+        ys = labels[:, : n * chunk].reshape(B, n, chunk).swapaxes(0, 1)
+        ms = mask[:, : n * chunk].reshape(B, n, chunk).swapaxes(0, 1)
+
+        def body(carry, xs):
+            h_c, y_c, m_c = xs
+            l, c = one(h_c, y_c, m_c)
+            return (carry[0] + l, carry[1] + c), None
+
+        (loss, count), _ = jax.lax.scan(
+            body, (jnp.float32(0.0), jnp.float32(0.0)), (hs, ys, ms))
+    else:
+        loss = jnp.float32(0.0)
+        count = jnp.float32(0.0)
+    if rem:
+        l, c = one(hidden[:, n * chunk:], labels[:, n * chunk:], mask[:, n * chunk:])
+        loss, count = loss + l, count + c
+    return loss, count

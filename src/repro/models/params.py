@@ -1,0 +1,104 @@
+"""Declarative parameter specs.
+
+Each model declares its parameters once as a (possibly nested) dict of
+``P(shape, logical_axes, init)``; from that single source of truth we derive
+initialization, sharding (PartitionSpecs via logical rules), abstract
+ShapeDtypeStructs for the dry-run, and parameter counts — guaranteed
+consistent with each other.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.axes import spec_for
+
+
+@dataclasses.dataclass(frozen=True)
+class P:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]        # logical axis names, len == ndim
+    init: str = "normal"                   # normal | zeros | ones | embed
+    scale: Optional[float] = None          # overrides fan-in scaling
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+Specs = Dict[str, Any]   # nested dict: str -> P | Specs
+
+
+def _fan_in(spec: P) -> int:
+    # convention: last dim is the output dim; everything else is fan-in,
+    # except stacked-layer / expert axes which don't contract in the matmul.
+    dims = [d for d, a in zip(spec.shape, spec.axes) if a not in ("layers", "experts")]
+    if len(dims) <= 1:
+        return max(dims[0] if dims else 1, 1)
+    return max(int(np.prod(dims[:-1])), 1)
+
+
+def _init_leaf(key: jax.Array, spec: P, dtype) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    if spec.init == "embed":
+        scale = spec.scale if spec.scale is not None else 0.02
+        return (jax.random.normal(key, spec.shape, jnp.float32) * scale).astype(dtype)
+    scale = spec.scale if spec.scale is not None else 1.0 / math.sqrt(_fan_in(spec))
+    return (jax.random.normal(key, spec.shape, jnp.float32) * scale).astype(dtype)
+
+
+def _walk(specs: Specs, path=()):
+    for k, v in sorted(specs.items()):
+        if isinstance(v, P):
+            yield path + (k,), v
+        else:
+            yield from _walk(v, path + (k,))
+
+
+def init_params(specs: Specs, key: jax.Array, dtype) -> Dict[str, Any]:
+    leaves = list(_walk(specs))
+    keys = jax.random.split(key, max(len(leaves), 1))
+    out: Dict[str, Any] = {}
+    for (path, spec), k in zip(leaves, keys):
+        node = out
+        for part in path[:-1]:
+            node = node.setdefault(part, {})
+        node[path[-1]] = _init_leaf(k, spec, dtype)
+    return out
+
+
+def abstract_params(specs: Specs, dtype) -> Dict[str, Any]:
+    """ShapeDtypeStructs matching init_params (used by the dry-run)."""
+    out: Dict[str, Any] = {}
+    for path, spec in _walk(specs):
+        node = out
+        for part in path[:-1]:
+            node = node.setdefault(part, {})
+        node[path[-1]] = jax.ShapeDtypeStruct(spec.shape, dtype)
+    return out
+
+
+def param_specs_tree(specs: Specs) -> Dict[str, Any]:
+    """PartitionSpec pytree (resolved against the active mesh/rules)."""
+    out: Dict[str, Any] = {}
+    for path, spec in _walk(specs):
+        node = out
+        for part in path[:-1]:
+            node = node.setdefault(part, {})
+        node[path[-1]] = spec_for(spec.axes, spec.shape)
+    return out
+
+
+def param_count(specs: Specs) -> int:
+    return sum(int(np.prod(s.shape)) for _, s in _walk(specs))
+
+
+def param_bytes(specs: Specs, dtype) -> int:
+    return param_count(specs) * jnp.dtype(dtype).itemsize

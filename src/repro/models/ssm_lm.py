@@ -1,0 +1,115 @@
+"""Pure-SSM language model (mamba2-130m family): attention-free."""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.axes import logical_constraint
+from repro.models import mamba2
+from repro.models.layers import (
+    chunked_cross_entropy,
+    embed_specs,
+    embed_tokens,
+    logits_for,
+    rms_norm,
+)
+from repro.models.params import P, Specs
+from repro.models.transformer import stack_specs
+
+
+def ssm_lm_specs(cfg: ArchConfig) -> Specs:
+    layer = {
+        "norm": P((cfg.d_model,), ("embed",), init="zeros"),
+        "ssd": mamba2.ssd_block_specs(cfg),
+    }
+    return {
+        "embed": embed_specs(cfg),
+        "layers": stack_specs(layer, cfg.n_layers),
+        "final_norm": P((cfg.d_model,), ("embed",), init="zeros"),
+    }
+
+
+def _backbone(cfg: ArchConfig, params: Dict[str, Any], x: jax.Array,
+              collect_state: bool):
+    def block(x, layer_params):
+        y, st = mamba2.ssd_block_train(
+            cfg, layer_params["ssd"],
+            rms_norm(x, layer_params["norm"], cfg.norm_eps),
+            return_state=True)
+        out = logical_constraint(x + y, "batch", "res_seq", "embed")
+        return out, st
+
+    blk = jax.checkpoint(block) if (cfg.remat and not collect_state) else block
+
+    def body(carry, layer_params):
+        out, st = blk(carry, layer_params)
+        return out, st if collect_state else None
+
+    h, states = jax.lax.scan(body, x, params["layers"])
+    return rms_norm(h, params["final_norm"], cfg.norm_eps), states
+
+
+def train_loss(cfg: ArchConfig, params: Dict[str, Any],
+               batch: Dict[str, jax.Array]
+               ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    tokens = batch["tokens"]
+    inputs, labels = tokens[:, :-1], tokens[:, 1:]
+    x = embed_tokens(params["embed"], inputs)
+    h, _ = _backbone(cfg, params, x, collect_state=False)
+    mask = (labels >= 0).astype(jnp.float32)
+    loss_sum, count = chunked_cross_entropy(
+        params["embed"], h, jnp.maximum(labels, 0), mask, cfg.loss_chunk)
+    loss = loss_sum / jnp.maximum(count, 1.0)
+    return loss, {"ce_loss": loss, "loss": loss, "tokens": count}
+
+
+class SSMCache(NamedTuple):
+    ssm: mamba2.SSMState       # stacked (L, ...)
+    length: jax.Array          # (B,)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype) -> SSMCache:
+    del max_len                # state is O(1) in history length
+    return SSMCache(mamba2.init_ssm_state(cfg, batch, cfg.n_layers, dtype),
+                    jnp.zeros((batch,), jnp.int32))
+
+
+def cache_specs(cfg: ArchConfig, batch: int, max_len: int, dtype) -> SSMCache:
+    del max_len
+    return SSMCache(mamba2.ssm_state_specs(cfg, batch, cfg.n_layers, dtype),
+                    jax.ShapeDtypeStruct((batch,), jnp.int32))
+
+
+def prefill(cfg: ArchConfig, params: Dict[str, Any],
+            batch: Dict[str, jax.Array], max_len: int
+            ) -> Tuple[jax.Array, SSMCache]:
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = embed_tokens(params["embed"], tokens)
+    h, (conv_s, ssm_h) = _backbone(cfg, params, x, collect_state=True)
+    logits = logits_for(params["embed"], h[:, -1:, :])
+    cache = SSMCache(mamba2.SSMState(conv_s, ssm_h),
+                     jnp.full((B,), S, jnp.int32))
+    return logits, cache
+
+
+def decode_step(cfg: ArchConfig, params: Dict[str, Any], cache: SSMCache,
+                tokens: jax.Array) -> Tuple[jax.Array, SSMCache]:
+    x = embed_tokens(params["embed"], tokens)
+
+    def body(carry, xs):
+        layer_params, conv_s, ssm_h = xs
+        y, (conv_s, ssm_h) = mamba2.ssd_block_decode(
+            cfg, layer_params["ssd"],
+            rms_norm(carry, layer_params["norm"], cfg.norm_eps),
+            (conv_s, ssm_h))
+        return carry + y, (conv_s, ssm_h)
+
+    h, (conv_s, ssm_h) = jax.lax.scan(
+        body, x, (params["layers"], cache.ssm.conv, cache.ssm.h))
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = logits_for(params["embed"], h)
+    return logits, SSMCache(mamba2.SSMState(conv_s, ssm_h), cache.length + 1)

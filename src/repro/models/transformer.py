@@ -1,0 +1,223 @@
+"""Decoder-only transformer LM (dense / MoE / VLM backbones).
+
+Layers are scanned (params stacked on a leading 'layers' axis) so HLO size
+and compile time are depth-independent, and the layer loop appears as a
+single Loop vertex in the ScalAna PSG — mirroring the paper's treatment of
+outer iteration loops.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.axes import logical_constraint
+from repro.models import attention as attn
+from repro.models import moe as moe_lib
+from repro.models.layers import (
+    chunked_cross_entropy,
+    embed_specs,
+    embed_tokens,
+    logits_for,
+    mlp_apply,
+    mlp_specs,
+    rms_norm,
+)
+from repro.models.params import P, Specs
+
+
+def stack_specs(specs: Specs, n: int) -> Specs:
+    """Add a leading stacked-layer dim to every leaf."""
+    out: Specs = {}
+    for k, v in specs.items():
+        if isinstance(v, P):
+            out[k] = P((n,) + v.shape, ("layers",) + v.axes, v.init, v.scale)
+        else:
+            out[k] = stack_specs(v, n)
+    return out
+
+
+def block_specs(cfg: ArchConfig) -> Specs:
+    specs: Specs = {
+        "attn_norm": P((cfg.d_model,), ("embed",), init="zeros"),
+        "attn": attn.attention_specs(cfg),
+        "mlp_norm": P((cfg.d_model,), ("embed",), init="zeros"),
+    }
+    if cfg.family == "moe":
+        specs["moe"] = moe_lib.moe_specs(cfg)
+    else:
+        specs["mlp"] = mlp_specs(cfg)
+    return specs
+
+
+def lm_specs(cfg: ArchConfig) -> Specs:
+    return {
+        "embed": embed_specs(cfg),
+        "layers": stack_specs(block_specs(cfg), cfg.n_layers),
+        "final_norm": P((cfg.d_model,), ("embed",), init="zeros"),
+        **({"patch_proj": P((cfg.d_model, cfg.d_model), ("embed", "embed"))}
+           if cfg.family == "vlm" else {}),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Training forward
+# ---------------------------------------------------------------------------
+
+def _block_train(cfg: ArchConfig, moe_strategy: str, x: jax.Array,
+                 p: Dict[str, Any]) -> Tuple[jax.Array, jax.Array]:
+    """One transformer block. Returns (x, moe_aux) with aux=(lb, z) or zeros."""
+    h = x + attn.attention_train(cfg, p["attn"],
+                                 rms_norm(x, p["attn_norm"], cfg.norm_eps))
+    hn = rms_norm(h, p["mlp_norm"], cfg.norm_eps)
+    if cfg.family == "moe":
+        # single explicit gather point: under SP the dispatch/combine
+        # einsums would otherwise each re-gather the seq-sharded stream
+        # (measured 54 AGs/layer on dbrx -- see EXPERIMENTS.md SPerf)
+        hn = logical_constraint(hn, "batch", "seq", "embed")
+        y, m = moe_lib.moe_apply(cfg, p["moe"], hn, moe_strategy)
+        aux = jnp.stack([m["moe_aux_loss"], m["moe_z_loss"],
+                         m["moe_drop_frac"]])
+    else:
+        y = mlp_apply(cfg, p["mlp"], hn)
+        aux = jnp.zeros((3,), jnp.float32)
+    out = h + y
+    out = logical_constraint(out, "batch", "res_seq", "embed")
+    return out, aux
+
+
+def backbone_train(cfg: ArchConfig, params: Dict[str, Any], x: jax.Array,
+                   moe_strategy: str = "einsum") -> Tuple[jax.Array, jax.Array]:
+    """Run all blocks over embedded input x: (B, S, D). Returns (h, aux)."""
+    block = functools.partial(_block_train, cfg, moe_strategy)
+    if cfg.remat:
+        block = jax.checkpoint(block)
+
+    def body(carry, layer_params):
+        y, aux = block(carry, layer_params)
+        return y, aux
+
+    h, auxs = jax.lax.scan(body, x, params["layers"])
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    return h, jnp.sum(auxs, axis=0)
+
+
+def _embed_inputs(cfg: ArchConfig, params: Dict[str, Any],
+                  batch: Dict[str, jax.Array], tokens: jax.Array) -> jax.Array:
+    x = embed_tokens(params["embed"], tokens)
+    if cfg.family == "vlm":
+        patches = batch["patches"].astype(x.dtype) @ params["patch_proj"]
+        x = jnp.concatenate([patches, x], axis=1)
+    return x
+
+
+def train_loss(cfg: ArchConfig, params: Dict[str, Any],
+               batch: Dict[str, jax.Array], moe_strategy: str = "einsum"
+               ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    tokens = batch["tokens"]
+    inputs, labels = tokens[:, :-1], tokens[:, 1:]
+    x = _embed_inputs(cfg, params, batch, inputs)
+    h, aux = backbone_train(cfg, params, x, moe_strategy)
+    if cfg.family == "vlm":                   # loss over text positions only
+        h = h[:, batch["patches"].shape[1]:]
+    mask = (labels >= 0).astype(jnp.float32)
+    loss_sum, count = chunked_cross_entropy(
+        params["embed"], h, jnp.maximum(labels, 0), mask, cfg.loss_chunk)
+    loss = loss_sum / jnp.maximum(count, 1.0)
+    metrics = {"ce_loss": loss, "tokens": count}
+    if cfg.family == "moe":
+        metrics.update(moe_aux_loss=aux[0], moe_z_loss=aux[1],
+                       moe_drop_frac=aux[2])
+        loss = loss + 0.01 * aux[0] + 1e-3 * aux[1]
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+class LMCache(NamedTuple):
+    kv: attn.KVCache
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype) -> LMCache:
+    return LMCache(attn.init_kv_cache(cfg, batch, max_len, cfg.n_layers, dtype))
+
+
+def cache_specs(cfg: ArchConfig, batch: int, max_len: int, dtype) -> LMCache:
+    return LMCache(attn.kv_cache_specs(cfg, batch, max_len, cfg.n_layers, dtype))
+
+
+def _block_prefill(cfg: ArchConfig, x: jax.Array, p: Dict[str, Any],
+                   max_len: int):
+    """Block forward that also emits this layer's (padded) K/V for the cache."""
+    B, S, _ = x.shape
+    xn = rms_norm(x, p["attn_norm"], cfg.norm_eps)
+    positions = jnp.arange(S)[None, :]
+    q, k, v = attn.qkv(cfg, p["attn"], xn, positions)
+    o = attn.attend(q, k, v, causal=True,
+                    softmax_scale=cfg.resolved_head_dim() ** -0.5)
+    h = x + o.reshape(B, S, -1) @ attn.wo_matrix(p["attn"])
+    hn = rms_norm(h, p["mlp_norm"], cfg.norm_eps)
+    if cfg.family == "moe":
+        y, _ = moe_lib.moe_apply(
+            cfg, p["moe"], hn,
+            capacity_factor=moe_lib.SERVE_CAPACITY_FACTOR)
+    else:
+        y = mlp_apply(cfg, p["mlp"], hn)
+    out = h + y
+    pad = max_len - S
+    kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    return out, (kp, vp)
+
+
+def prefill(cfg: ArchConfig, params: Dict[str, Any],
+            batch: Dict[str, jax.Array], max_len: int
+            ) -> Tuple[jax.Array, LMCache]:
+    """Process the full prompt; returns (last-position logits, primed cache)."""
+    tokens = batch["tokens"]
+    x = _embed_inputs(cfg, params, batch, tokens)
+    B, S, _ = x.shape
+
+    def body(carry, layer_params):
+        y, kv = _block_prefill(cfg, carry, layer_params, max_len)
+        return y, kv
+
+    h, (ks, vs) = jax.lax.scan(body, x, params["layers"])
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = logits_for(params["embed"], h[:, -1:, :])
+    lengths = jnp.full((B,), S, jnp.int32)
+    return logits, LMCache(attn.KVCache(ks, vs, lengths))
+
+
+def decode_step(cfg: ArchConfig, params: Dict[str, Any], cache: LMCache,
+                tokens: jax.Array) -> Tuple[jax.Array, LMCache]:
+    """One greedy decode step. tokens: (B, 1) int32."""
+    kv = cache.kv
+    x = embed_tokens(params["embed"], tokens)
+
+    def body(carry, xs):
+        layer_params, k_c, v_c = xs
+        xn = rms_norm(carry, layer_params["attn_norm"], cfg.norm_eps)
+        o, k_c, v_c = attn.attention_decode(cfg, layer_params["attn"], xn,
+                                            k_c, v_c, kv.length)
+        h = carry + o
+        hn = rms_norm(h, layer_params["mlp_norm"], cfg.norm_eps)
+        if cfg.family == "moe":
+            y, _ = moe_lib.moe_apply(
+                cfg, layer_params["moe"], hn,
+                capacity_factor=moe_lib.SERVE_CAPACITY_FACTOR)
+        else:
+            y = mlp_apply(cfg, layer_params["mlp"], hn)
+        return h + y, (k_c, v_c)
+
+    h, (ks, vs) = jax.lax.scan(body, x, (params["layers"], kv.k, kv.v))
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = logits_for(params["embed"], h)
+    new_cache = LMCache(attn.KVCache(ks, vs, kv.length + 1))
+    return logits, new_cache

@@ -1,0 +1,92 @@
+"""AdamW with decoupled weight decay and global-norm clipping.
+
+Optimizer state is a pytree congruent with params, so the same
+NamedShardings shard it (ZeRO-1 for free under FSDP rules).  All math in
+f32 regardless of param dtype (mixed-precision master-weights convention
+is the caller's choice via ``mu_dtype``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class AdamWState:
+    step: jax.Array          # i32 scalar
+    mu: Pytree               # first moment
+    nu: Pytree               # second moment
+
+
+def adamw_init(params: Pytree, mu_dtype=jnp.float32) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, mu_dtype)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(zeros, params),
+        nu=jax.tree.map(zeros, params),
+    )
+
+
+def global_norm(tree: Pytree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    if not leaves:
+        return jnp.zeros(())
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(grads: Pytree, max_norm: float
+                        ) -> Tuple[Pytree, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), norm
+
+
+def adamw_update(grads: Pytree, state: AdamWState, params: Pytree, *,
+                 lr: jax.Array, b1: float = 0.9, b2: float = 0.95,
+                 eps: float = 1e-8, weight_decay: float = 0.1,
+                 max_grad_norm: float = 1.0
+                 ) -> Tuple[Pytree, AdamWState, dict]:
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    if max_grad_norm and max_grad_norm > 0:
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+    else:
+        gnorm = global_norm(grads)
+    step = state.step + 1
+    stepf = step.astype(jnp.float32)
+    bc1 = 1.0 - jnp.power(b1, stepf)
+    bc2 = 1.0 - jnp.power(b2, stepf)
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        m = b1 * m + (1.0 - b1) * g32
+        v = b2 * v + (1.0 - b2) * jnp.square(g32)
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = mhat / (jnp.sqrt(vhat) + eps)
+        if weight_decay:
+            delta = delta + weight_decay * p.astype(jnp.float32)
+        newp = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return newp, m, v
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    flat_p = treedef.flatten_up_to(params)
+    outs = [upd(g, m, v, p) for g, m, v, p in
+            zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in outs])
+    new_m = treedef.unflatten([o[1] for o in outs])
+    new_v = treedef.unflatten([o[2] for o in outs])
+    new_state = AdamWState(step=step, mu=new_m, nu=new_v)
+    metrics = {"grad_norm": gnorm,
+               "param_norm": global_norm(params),
+               "lr": jnp.asarray(lr, jnp.float32)}
+    return new_p, new_state, metrics

@@ -1,0 +1,31 @@
+"""Learning-rate schedules as pure ``step -> lr`` functions (jit-safe)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.full((), lr, jnp.float32)
+
+
+def warmup_linear(lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1):
+    def f(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = s / jnp.maximum(warmup_steps, 1)
+        frac = (s - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1)
+        decay = 1.0 - (1.0 - final_frac) * jnp.clip(frac, 0.0, 1.0)
+        return lr * jnp.where(s < warmup_steps, warm, decay)
+    return f
+
+
+def warmup_cosine(lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1):
+    def f(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = s / jnp.maximum(warmup_steps, 1)
+        frac = (s - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * jnp.clip(frac, 0.0, 1.0)))
+        decay = final_frac + (1.0 - final_frac) * cos
+        return lr * jnp.where(s < warmup_steps, warm, decay)
+    return f

@@ -1,0 +1,3 @@
+from repro.serving.engine import ServingEngine, Request, Result
+
+__all__ = ["ServingEngine", "Request", "Result"]

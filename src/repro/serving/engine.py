@@ -1,0 +1,211 @@
+"""Batched serving engine: slot-based continuous batching over a fixed
+(batch_slots, max_seq) cache.
+
+One compiled decode step serves the whole slot batch; requests join/leave
+slots without recompilation (shape stability is what makes this deployable:
+exactly one compiled decode function).  Idle slots decode padding — masked
+out at sampling time on the host.
+
+Per-slot cache hygiene is generic across cache families (LM KV cache, SSM
+state, hybrid, enc-dec): every cache leaf is either per-batch 1-D
+(``length``-like, batch axis 0) or stacked (layers/sites first, batch axis
+1), so slot admission zeroes axis-0/1 rows and every decode call overrides
+the length leaf with the host-tracked per-slot positions.
+
+Sampling is reproducible under any batching order: greedy, or Gumbel
+argmax keyed on (request uid, position) via a counter-based PRNG — the
+serving analogue of the data pipeline's determinism.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.api import ModelBundle
+
+Pytree = Any
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray                 # (prompt_len,) int32
+    max_new_tokens: int = 16
+    temperature: float = 0.0           # 0 => greedy
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class Result:
+    uid: int
+    tokens: List[int]
+    prompt_len: int
+    latency_s: float = 0.0
+
+
+def _batch_axis(leaf, slots: int) -> Optional[int]:
+    if leaf.ndim == 1 and leaf.shape[0] == slots:
+        return 0
+    if leaf.ndim >= 2 and leaf.shape[1] == slots:
+        return 1
+    return None
+
+
+class ServingEngine:
+    def __init__(self, model: ModelBundle, params: Pytree, *,
+                 batch_slots: int = 4, max_seq: int = 128):
+        self.model = model
+        self.params = params
+        self.slots = batch_slots
+        self.max_seq = max_seq
+        self.cache = model.init_cache(batch_slots, max_seq)
+        # slot bookkeeping (host side)
+        self.slot_req: List[Optional[Request]] = [None] * batch_slots
+        self.slot_pos = np.zeros(batch_slots, np.int32)   # tokens consumed
+        self.slot_done = np.ones(batch_slots, bool)
+        self.slot_out: List[List[int]] = [[] for _ in range(batch_slots)]
+        self.slot_t0 = np.zeros(batch_slots, np.float64)
+        self.last_token = np.zeros(batch_slots, np.int32)
+        self._decode = jax.jit(model.decode_step)
+        self.completed: List[Result] = []
+        self.decode_steps = 0
+
+    # ------------------------------------------------------------------
+    def _with_lengths(self, cache: Pytree) -> Pytree:
+        """Override the per-slot length leaf with host-tracked positions."""
+        pos = jnp.asarray(self.slot_pos)
+
+        def fix(leaf):
+            if (hasattr(leaf, "dtype") and leaf.dtype == jnp.int32
+                    and leaf.ndim == 1 and leaf.shape[0] == self.slots):
+                return pos
+            return leaf
+
+        return jax.tree.map(fix, cache)
+
+    def _clear_slot(self, cache: Pytree, slot: int) -> Pytree:
+        """Zero one slot's rows in every cache leaf (state hygiene)."""
+        def clear(leaf):
+            ax = _batch_axis(leaf, self.slots)
+            if ax is None:
+                return leaf
+            idx = [slice(None)] * leaf.ndim
+            idx[ax] = slot
+            return leaf.at[tuple(idx)].set(0)
+
+        return jax.tree.map(clear, cache)
+
+    def _merge_slot(self, new: Pytree, old: Pytree, slot: int) -> Pytree:
+        """Take ``new``'s rows for one slot, ``old``'s rows elsewhere.
+
+        Prefill isolation: decoding a prompt token through the shared batch
+        must not advance other slots' state (harmless for KV caches whose
+        writes are position-indexed, but SSM state accumulates every call).
+        """
+        def merge(n, o):
+            ax = _batch_axis(n, self.slots)
+            if ax is None:
+                return n
+            idx = [slice(None)] * n.ndim
+            idx[ax] = slot
+            return o.at[tuple(idx)].set(n[tuple(idx)])
+
+        return jax.tree.map(merge, new, old)
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> bool:
+        """Admit a request into a free slot (prefill now). False if full."""
+        free = [i for i, d in enumerate(self.slot_done) if d]
+        if not free:
+            return False
+        slot = free[0]
+        self.slot_req[slot] = req
+        self.slot_done[slot] = False
+        self.slot_out[slot] = []
+        self.slot_t0[slot] = time.perf_counter()
+        self.slot_pos[slot] = 0
+        self.cache = self._clear_slot(self.cache, slot)
+        # token-by-token prefill through the decode path: one compiled fn
+        # total, identical cache layout, exact causal semantics.
+        toks = np.asarray(req.prompt, np.int32).reshape(-1)
+        toks = toks[: self.max_seq - req.max_new_tokens - 1]
+        logits = None
+        for t in toks:
+            tok_batch = np.asarray(self.last_token).reshape(-1, 1).copy()
+            tok_batch[slot, 0] = t
+            before = self.cache
+            logits, after = self._step_model(tok_batch)
+            self.cache = self._merge_slot(after, before, slot)
+            self.slot_pos[slot] += 1
+        if logits is not None:
+            nxt = self._sample(slot, logits, int(self.slot_pos[slot]))
+        else:
+            nxt = int(toks[-1]) if len(toks) else 0
+        self.last_token[slot] = nxt
+        self.slot_out[slot].append(nxt)
+        return True
+
+    def _step_model(self, tok_batch: np.ndarray):
+        cache = self._with_lengths(self.cache)
+        logits, cache = self._decode(self.params, cache,
+                                     jnp.asarray(tok_batch, jnp.int32))
+        self.decode_steps += 1
+        return logits, cache
+
+    def _sample(self, slot: int, logits: jax.Array, position: int) -> int:
+        req = self.slot_req[slot]
+        row = np.asarray(logits)[slot, -1]
+        if req.temperature <= 0.0:
+            return int(row.argmax())
+        key = jax.random.fold_in(
+            jax.random.fold_in(jax.random.PRNGKey(req.seed), req.uid),
+            position)
+        g = np.asarray(jax.random.gumbel(key, row.shape))
+        return int((row / req.temperature + g).argmax())
+
+    # ------------------------------------------------------------------
+    def step(self) -> int:
+        """One decode step for every active slot. Returns #active."""
+        active = [i for i, d in enumerate(self.slot_done) if not d]
+        if not active:
+            return 0
+        tok = np.asarray(self.last_token).reshape(-1, 1)
+        logits, self.cache = self._step_model(tok)
+        for i in active:
+            self.slot_pos[i] += 1
+            nxt = self._sample(i, logits, int(self.slot_pos[i]))
+            self.last_token[i] = nxt
+            self.slot_out[i].append(nxt)
+            req = self.slot_req[i]
+            if (len(self.slot_out[i]) >= req.max_new_tokens
+                    or self.slot_pos[i] >= self.max_seq - 1):
+                self._finish(i)
+        return len(active)
+
+    def _finish(self, slot: int) -> None:
+        req = self.slot_req[slot]
+        self.completed.append(Result(
+            uid=req.uid, tokens=list(self.slot_out[slot]),
+            prompt_len=len(req.prompt),
+            latency_s=time.perf_counter() - self.slot_t0[slot]))
+        self.slot_done[slot] = True
+        self.slot_req[slot] = None
+        self.slot_pos[slot] = 0
+
+    # ------------------------------------------------------------------
+    def run(self, requests: List[Request], *,
+            max_steps: int = 10_000) -> List[Result]:
+        """Serve requests to completion (continuous batching)."""
+        pending = list(requests)
+        steps = 0
+        while (pending or not all(self.slot_done)) and steps < max_steps:
+            while pending and self.submit(pending[0]):
+                pending.pop(0)
+            self.step()
+            steps += 1
+        return sorted(self.completed, key=lambda r: r.uid)

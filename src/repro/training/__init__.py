@@ -1,0 +1,3 @@
+from repro.training.trainer import Trainer, TrainState, make_train_step
+
+__all__ = ["Trainer", "TrainState", "make_train_step"]

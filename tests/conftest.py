@@ -1,0 +1,47 @@
+import os
+import sys
+
+# Tests must see the real single CPU device (the dry-run's 512 placeholder
+# devices are set ONLY inside repro.launch.dryrun).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_smoke
+from repro.models.api import build_model
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+_BUNDLE_CACHE = {}
+
+
+def smoke_bundle(arch: str):
+    """Cached (cfg, model, params) at smoke scale."""
+    if arch not in _BUNDLE_CACHE:
+        cfg = get_smoke(arch)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        _BUNDLE_CACHE[arch] = (cfg, model, params)
+    return _BUNDLE_CACHE[arch]
+
+
+def smoke_batch(cfg, batch=2, seq=32, train=True):
+    toks = (jnp.arange(batch * (seq + (1 if train else 0)), dtype=jnp.int32)
+            .reshape(batch, -1) * 7919) % cfg.vocab_size
+    out = {"tokens": toks}
+    if cfg.family == "encdec":
+        out["frames"] = jnp.ones((batch, cfg.frontend_len, cfg.d_model),
+                                 cfg.cdtype()) * 0.02
+    if cfg.family == "vlm":
+        out["patches"] = jnp.ones((batch, cfg.frontend_len, cfg.d_model),
+                                  cfg.cdtype()) * 0.02
+    return out

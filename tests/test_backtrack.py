@@ -1,0 +1,119 @@
+"""Backtracking root-cause detection (Algorithm 1): the paper's core."""
+import pytest
+
+from repro.core import (COMM, COMP, PSG, backtrack, build_ppg,
+                        detect_abnormal, detect_non_scalable, root_causes)
+from repro.core.backtrack import WAIT_COUNTER, backtrack_one
+from repro.core.graph import PerfVector
+from repro.core.inject import simulate, simulate_series
+
+
+def _pipeline_psg():
+    """comp0 -> comp1 -> p2p(0->1,2->3,...) -> comp2 -> allreduce."""
+    g = PSG()
+    root = g.new_vertex("Root", "root")
+    g.root = root.vid
+    c0 = g.new_vertex(COMP, "load", parent=root.vid, source="app.py:10")
+    c1 = g.new_vertex(COMP, "halo", parent=root.vid, source="app.py:20")
+    p2p = g.new_vertex(COMM, "ppermute", parent=root.vid, source="app.py:30")
+    p2p.comm_kind = "ppermute"
+    p2p.comm_bytes = 1e5
+    p2p.p2p_pairs = [(i, (i + 1) % 8) for i in range(8)]
+    c2 = g.new_vertex(COMP, "solve", parent=root.vid, source="app.py:40")
+    ar = g.new_vertex(COMM, "psum", parent=root.vid, source="app.py:50")
+    ar.comm_kind, ar.comm_bytes = "all_reduce", 1e6
+    for v in (c0, c1, p2p, c2, ar):
+        g.add_edge(root.vid, v.vid, "control")
+    g.add_edge(c0.vid, c1.vid, "data")
+    g.add_edge(c1.vid, p2p.vid, "data")
+    g.add_edge(p2p.vid, c2.vid, "data")
+    g.add_edge(c2.vid, ar.vid, "data")
+    return g, (c0.vid, c1.vid, p2p.vid, c2.vid, ar.vid)
+
+
+def test_straggler_propagates_and_backtracks_to_root_cause():
+    """The paper's NPB-CG experiment in miniature: a delay injected into one
+    process propagates through p2p dependence and surfaces at the
+    all-reduce; Algorithm 1 walks it back to the injected computation."""
+    g, (c0, c1, p2p, c2, ar) = _pipeline_psg()
+    res = simulate(g, 8, lambda p, vid: 0.01,
+                   inject={(4, c0): 0.5})       # straggler: proc 4 at 'load'
+    ab = detect_abnormal(res.ppg, abnorm_thd=1.3)
+    assert ab, "propagated delay must create abnormal vertices"
+    paths = backtrack(res.ppg, [], ab)
+    assert paths
+    rcs = root_causes(paths, g, ppg=res.ppg)
+    assert any(node == (4, c0) for node, _, _ in rcs), \
+        f"root cause must be (proc 4, load); got {rcs}"
+
+
+def test_backtrack_prunes_nonwaiting_p2p():
+    """p2p edges without waiting events are pruned (search-space opt)."""
+    g, (c0, c1, p2p, c2, ar) = _pipeline_psg()
+    perf = {p: {} for p in range(4)}
+    for p in range(4):
+        for vid in (c0, c1, c2):
+            perf[p][vid] = PerfVector(time=0.01)
+        # p2p with NO waiting
+        perf[p][p2p] = PerfVector(time=0.001,
+                                  counters={WAIT_COUNTER: 0.0})
+        perf[p][ar] = PerfVector(time=0.001)
+    ppg = build_ppg(g, 4, perf)
+    path = backtrack_one(ppg, (0, c2), reason="abnormal", scanned=set())
+    # must walk straight through data deps within proc 0, never jumping
+    procs = {n[0] for n in path.nodes}
+    assert procs == {0}
+
+
+def test_backtrack_follows_waiting_p2p():
+    g, (c0, c1, p2p, c2, ar) = _pipeline_psg()
+    perf = {p: {} for p in range(4)}
+    for p in range(4):
+        for vid in (c0, c1, c2):
+            perf[p][vid] = PerfVector(time=0.3 if (p, vid) == (1, c1)
+                                      else 0.01)
+        perf[p][p2p] = PerfVector(
+            time=0.3 if p == 2 else 0.001,
+            counters={WAIT_COUNTER: 0.29 if p == 2 else 0.0})
+        perf[p][ar] = PerfVector(time=0.001)
+    ppg = build_ppg(g, 4, perf)
+    # proc 2 waited on the p2p; its cause is proc 1 (pairs 1->2)
+    path = backtrack_one(ppg, (2, c2), reason="abnormal", scanned=set())
+    procs = {n[0] for n in path.nodes}
+    assert 1 in procs, f"walk must cross to proc 1: {path.nodes}"
+
+
+def test_backtrack_terminates_and_covers_all_abnormal():
+    g, ids = _pipeline_psg()
+    res = simulate(g, 8, lambda p, vid: 0.01,
+                   inject={(2, ids[0]): 0.3, (6, ids[3]): 0.2})
+    ab = detect_abnormal(res.ppg)
+    paths = backtrack(res.ppg, [], ab)
+    # Algorithm 1 main loop: every abnormal vertex scanned or started from
+    scanned = set()
+    for p in paths:
+        scanned.update(p.nodes)
+    for a in ab:
+        assert (a.proc, a.vid) in scanned
+    for p in paths:
+        assert len(p.nodes) <= 256            # termination bound
+
+
+def test_non_scalable_plus_backtrack_end_to_end():
+    g, (c0, c1, p2p, c2, ar) = _pipeline_psg()
+
+    def time_at(p, vid, n):
+        if vid == c1:
+            return 0.1 * (0.7 + 0.3 / n) + (0.2 if p == 1 else 0.0)
+        if g.vertices[vid].kind == COMM:
+            return 0.0
+        return 0.1 / n
+
+    series = simulate_series(g, [4, 8, 16], time_at)
+    ns = detect_non_scalable(series, min_share=0.01)
+    assert ns
+    ab = detect_abnormal(series[16])
+    paths = backtrack(series[16], ns, ab)
+    assert paths
+    rcs = root_causes(paths, g, ppg=series[16])
+    assert rcs

@@ -1,0 +1,164 @@
+"""Checkpointing (fault tolerance) + Trainer integration tests."""
+import json
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import smoke_batch, smoke_bundle
+from repro.checkpoint import CheckpointManager, latest_step, save_checkpoint, \
+    load_checkpoint
+from repro.configs import get_smoke
+from repro.configs.base import RunConfig, ShapeConfig
+from repro.training import Trainer
+
+
+@pytest.fixture()
+def tmpdir(tmp_path):
+    return str(tmp_path)
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"layer": {"w": jax.random.normal(k, (4, 4)),
+                      "b": jnp.zeros((4,))},
+            "step": jnp.asarray(7, jnp.int32)}
+
+
+def test_save_load_roundtrip(tmpdir):
+    tree = _tree()
+    save_checkpoint(tmpdir, 3, tree, extra_meta={"note": "x"})
+    assert latest_step(tmpdir) == 3
+    loaded, meta = load_checkpoint(tmpdir, 3, tree)
+    assert meta == {"note": "x"}
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(loaded)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_atomicity_no_tmp_visible(tmpdir):
+    save_checkpoint(tmpdir, 1, _tree())
+    entries = os.listdir(tmpdir)
+    assert entries == ["step_1"]
+    # a stale tmp dir from a crashed writer is ignored by latest_step
+    os.makedirs(os.path.join(tmpdir, "step_9.tmp"))
+    assert latest_step(tmpdir) == 1
+
+
+def test_shape_mismatch_rejected(tmpdir):
+    save_checkpoint(tmpdir, 1, _tree())
+    bad = {"layer": {"w": jnp.zeros((2, 2)), "b": jnp.zeros((4,))},
+           "step": jnp.asarray(0, jnp.int32)}
+    with pytest.raises(ValueError):
+        load_checkpoint(tmpdir, 1, bad)
+
+
+def test_keep_n_gc(tmpdir):
+    mgr = CheckpointManager(tmpdir, keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, _tree(), blocking=True)
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(tmpdir))
+    assert steps == [3, 4]
+
+
+def test_async_save_and_restore_latest(tmpdir):
+    mgr = CheckpointManager(tmpdir, keep=3)
+    mgr.save(5, _tree(5))
+    mgr.wait()
+    out = mgr.restore_latest(_tree(0))
+    assert out is not None
+    step, tree, _ = out
+    assert step == 5
+    np.testing.assert_array_equal(np.asarray(tree["layer"]["w"]),
+                                  np.asarray(_tree(5)["layer"]["w"]))
+
+
+def test_mesh_agnostic_reshard_hook(tmpdir):
+    """shard_fn sees every leaf (elastic re-sharding entry point)."""
+    save_checkpoint(tmpdir, 1, _tree())
+    seen = []
+    load_checkpoint(tmpdir, 1, _tree(),
+                    shard_fn=lambda k, a: seen.append(k) or a)
+    assert sorted(seen) == ["layer/b", "layer/w", "step"]
+
+
+# ---------------------------------------------------------------------------
+# Trainer integration
+# ---------------------------------------------------------------------------
+
+def _run(tmpdir, arch="tinyllama-1.1b", steps=6, **kw):
+    run = RunConfig(arch=arch, total_steps=steps, learning_rate=1e-3,
+                    warmup_steps=2, checkpoint_dir=tmpdir,
+                    checkpoint_every=100, scalana=False, **kw)
+    cfg = get_smoke(arch)
+    shape = ShapeConfig("smoke", 32, 4, "train")
+    return Trainer(run, arch_cfg=cfg, shape=shape)
+
+
+def test_training_reduces_loss(tmpdir):
+    tr = _run(tmpdir, steps=8)
+    tr.train(num_steps=8)
+    losses = [m["loss"] for m in tr.metrics_log if "loss" in m]
+    assert losses[-1] < losses[0]
+    assert all(np.isfinite(l) for l in losses)
+
+
+def test_resume_continues_from_checkpoint(tmpdir):
+    tr = _run(tmpdir, steps=4)
+    tr.train(num_steps=4)
+    tr2 = _run(tmpdir, steps=4)
+    tr2.train(num_steps=4)
+    assert tr2.metrics_log[0]["step"] == 4      # resumed, not restarted
+
+
+def test_resume_bitwise_matches_uninterrupted(tmpdir):
+    """Kill-and-restart equals an uninterrupted run (data determinism +
+    full state in the checkpoint)."""
+    other = tmpdir + "_b"
+    tr_once = _run(other, steps=8)
+    tr_once.train(num_steps=8)
+
+    tr_a = _run(tmpdir, steps=8)
+    tr_a.train(num_steps=4)                     # "crash" after 4
+    tr_b = _run(tmpdir, steps=8)
+    state = tr_b.train(num_steps=4)             # restart, 4 more
+
+    uninterrupted = [m["loss"] for m in tr_once.metrics_log][4:]
+    resumed = [m["loss"] for m in tr_b.metrics_log]
+    np.testing.assert_allclose(resumed, uninterrupted, rtol=1e-5)
+    shutil.rmtree(other, ignore_errors=True)
+
+
+def test_grad_accumulation_matches_single_batch(tmpdir):
+    """microbatch=2 gradient == full-batch gradient (same total step)."""
+    arch = "tinyllama-1.1b"
+    t1 = _run(tmpdir + "_1", steps=1)
+    t2 = _run(tmpdir + "_2", steps=1, microbatch=2)
+    s1 = t1.train(num_steps=2, resume=False)
+    s2 = t2.train(num_steps=2, resume=False)
+    l1 = [m["loss"] for m in t1.metrics_log]
+    l2 = [m["loss"] for m in t2.metrics_log]
+    np.testing.assert_allclose(l1, l2, rtol=2e-3)
+
+
+def test_grad_compress_trains(tmpdir):
+    tr = _run(tmpdir, steps=6, grad_compress=True)
+    tr.train(num_steps=6)
+    losses = [m["loss"] for m in tr.metrics_log if "loss" in m]
+    assert losses[-1] < losses[0]
+    assert all(np.isfinite(l) for l in losses)
+
+
+def test_scalana_hooks_collect(tmpdir):
+    run = RunConfig(arch="tinyllama-1.1b", total_steps=6, warmup_steps=2,
+                    scalana=True, scalana_sample_every=3)
+    cfg = get_smoke("tinyllama-1.1b")
+    tr = Trainer(run, arch_cfg=cfg, shape=ShapeConfig("smoke", 32, 4, "train"))
+    tr.train(num_steps=6)
+    psg, perf, storage = tr.scalana_artifacts()
+    assert psg.stats()["total"] > 5
+    assert any(v.samples > 0 for v in perf.values())
+    assert 0 < storage < 10 * 2**20      # KBs-to-MBs, not GBs
+    assert len(tr.step_wall_times) == 6

@@ -1,0 +1,62 @@
+"""Elastic scaling: checkpoint/data-stream invariance across re-sharding.
+
+The 1000-node story requires that a job can restart on a DIFFERENT
+topology: the checkpoint is mesh-agnostic (saved logically unsharded) and
+the data pipeline regenerates the identical global stream for any shard
+count — together these make elastic restarts exact, not approximate."""
+import numpy as np
+import pytest
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.configs import SHAPES, get_smoke
+from repro.configs.base import RunConfig, ShapeConfig
+from repro.data import make_dataset
+from repro.training import Trainer
+
+
+def test_global_stream_invariant_under_resharding():
+    cfg = get_smoke("tinyllama-1.1b")
+    shape = ShapeConfig("t", 32, 16, "train")
+    for step in (0, 7, 123):
+        global_batch = make_dataset(cfg, shape).batch(step)["tokens"]
+        for shards in (2, 4, 8, 16):
+            ds = make_dataset(cfg, shape)
+            parts = [ds.shard(shards, i).batch(step)["tokens"]
+                     for i in range(shards)]
+            np.testing.assert_array_equal(np.concatenate(parts), global_batch)
+
+
+def test_restart_on_different_topology_is_exact(tmp_path):
+    """Train 4 steps 'on one topology', restart 'on another': losses equal
+    an uninterrupted run (the simulated topology change = different shard
+    views of the same global batch; single-controller CPU run consumes the
+    full global batch either way, so exactness reduces to checkpoint+data
+    determinism — asserted here end-to-end)."""
+    def run(ckpt, steps, num_steps):
+        run_cfg = RunConfig(arch="tinyllama-1.1b", total_steps=steps,
+                            warmup_steps=2, learning_rate=1e-3,
+                            checkpoint_dir=ckpt, checkpoint_every=100,
+                            scalana=False)
+        tr = Trainer(run_cfg, arch_cfg=get_smoke("tinyllama-1.1b"),
+                     shape=ShapeConfig("t", 32, 4, "train"))
+        tr.train(num_steps=num_steps)
+        return [m["loss"] for m in tr.metrics_log]
+
+    a = str(tmp_path / "a")
+    once = run(str(tmp_path / "b"), 8, 8)
+    run(a, 8, 4)
+    resumed = run(a, 8, 4)
+    np.testing.assert_allclose(resumed, once[4:], rtol=1e-5)
+
+
+def test_checkpoint_roundtrip_independent_of_leaf_order(tmp_path):
+    """Leaves are addressed by path, not position: a restarted process
+    with a differently-ordered (but congruent) pytree restores correctly."""
+    import jax.numpy as jnp
+    tree = {"b": jnp.ones((3,)), "a": {"x": jnp.zeros((2, 2))}}
+    save_checkpoint(str(tmp_path), 1, tree)
+    reordered = {"a": {"x": jnp.full((2, 2), 9.0)}, "b": jnp.zeros((3,))}
+    loaded, _ = load_checkpoint(str(tmp_path), 1, reordered)
+    np.testing.assert_array_equal(np.asarray(loaded["b"]), np.ones((3,)))
+    np.testing.assert_array_equal(np.asarray(loaded["a"]["x"]),
+                                  np.zeros((2, 2)))

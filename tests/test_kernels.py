@@ -1,0 +1,154 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + hypothesis."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.ssd_scan.ops import ssd_scan
+from repro.kernels.ssd_scan.ref import ssd_ref
+
+RNG = np.random.default_rng(7)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+SWEEP = [
+    # (B, nq, nkv, Sq, Sk, h, causal, bq, bk, dtype)
+    (1, 2, 2, 64, 64, 32, True, 32, 32, jnp.float32),
+    (2, 4, 2, 128, 128, 64, True, 64, 64, jnp.float32),
+    (1, 8, 1, 128, 128, 64, True, 128, 64, jnp.float32),   # MQA
+    (2, 4, 4, 64, 128, 32, False, 64, 64, jnp.float32),    # cross-ish
+    (1, 2, 2, 128, 128, 128, True, 64, 64, jnp.float32),   # big head
+    (1, 4, 2, 64, 64, 64, True, 64, 64, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("case", SWEEP)
+def test_flash_attention_sweep(case):
+    B, nq, nkv, Sq, Sk, h, causal, bq, bk, dt = case
+    q = jnp.asarray(RNG.standard_normal((B, nq, Sq, h)), dt)
+    k = jnp.asarray(RNG.standard_normal((B, nkv, Sk, h)), dt)
+    v = jnp.asarray(RNG.standard_normal((B, nkv, Sk, h)), dt)
+    out = flash_attention_kernel(q, k, v, causal=causal, block_q=bq,
+                                 block_k=bk, interpret=True)
+    ref = attention_ref(q, k, v, causal=causal)
+    tol = 2e-5 if dt == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_attention_models_layout():
+    """ops wrapper takes the models' (B, S, heads, h) layout."""
+    B, S, nq, nkv, h = 2, 64, 4, 2, 32
+    q = jnp.asarray(RNG.standard_normal((B, S, nq, h)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((B, S, nkv, h)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((B, S, nkv, h)), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, interpret=True)
+    ref = attention_ref(jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2),
+                        jnp.swapaxes(v, 1, 2), causal=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(jnp.swapaxes(ref, 1, 2),
+                                          np.float32), rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    B=st.integers(1, 2),
+    nkv=st.sampled_from([1, 2]),
+    group=st.sampled_from([1, 2, 4]),
+    blocks=st.integers(1, 3),
+    h=st.sampled_from([32, 64]),
+    causal=st.booleans(),
+)
+def test_flash_attention_property(B, nkv, group, blocks, h, causal):
+    nq = nkv * group
+    S = 32 * blocks
+    rng = np.random.default_rng(B * 100 + nq * 10 + S + h)
+    q = jnp.asarray(rng.standard_normal((B, nq, S, h)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, nkv, S, h)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, nkv, S, h)), jnp.float32)
+    out = flash_attention_kernel(q, k, v, causal=causal, block_q=32,
+                                 block_k=32, interpret=True)
+    ref = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=3e-5, atol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# SSD scan
+# ---------------------------------------------------------------------------
+
+SSD_SWEEP = [
+    # (B, S, H, P, N, chunk)
+    (1, 64, 2, 32, 16, 32),
+    (2, 128, 4, 64, 32, 64),
+    (1, 96, 2, 32, 16, 32),
+    (2, 100, 3, 16, 8, 64),      # ragged: padding path
+    (1, 256, 1, 64, 64, 64),
+]
+
+
+def _ssd_inputs(B, S, H, P, N, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((B, S, H, P)), jnp.float32)
+    dt = jnp.asarray(np.abs(rng.standard_normal((B, S, H))) * 0.1,
+                     jnp.float32)
+    A = -jnp.asarray(np.abs(rng.standard_normal((H,))) + 0.1, jnp.float32)
+    Bm = jnp.asarray(rng.standard_normal((B, S, N)), jnp.float32)
+    Cm = jnp.asarray(rng.standard_normal((B, S, N)), jnp.float32)
+    return x, dt, A, Bm, Cm
+
+
+@pytest.mark.parametrize("case", SSD_SWEEP)
+def test_ssd_scan_sweep(case):
+    B, S, H, P, N, chunk = case
+    x, dt, A, Bm, Cm = _ssd_inputs(B, S, H, P, N, seed=sum(case))
+    y, hf = ssd_scan(x, dt, A, Bm, Cm, chunk=chunk, return_final=True,
+                     interpret=True)
+    yr, hr = ssd_ref(x, dt, A, Bm, Cm, chunk=chunk, return_final=True)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(hf), np.asarray(hr),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_scan_matches_sequential_recurrence():
+    """Chunked kernel == naive per-step recurrence (independent oracle)."""
+    B, S, H, P, N = 1, 32, 2, 8, 4
+    x, dt, A, Bm, Cm = _ssd_inputs(B, S, H, P, N, seed=3)
+    y, hf = ssd_scan(x, dt, A, Bm, Cm, chunk=16, return_final=True,
+                     interpret=True)
+    h = np.zeros((B, H, N, P))
+    ys = np.zeros((B, S, H, P))
+    xn, dtn, An = np.asarray(x), np.asarray(dt), np.asarray(A)
+    Bn, Cn = np.asarray(Bm), np.asarray(Cm)
+    for t in range(S):
+        dA = np.exp(dtn[:, t] * An)                        # (B,H)
+        dBx = np.einsum("bh,bn,bhp->bhnp", dtn[:, t], Bn[:, t], xn[:, t])
+        h = h * dA[..., None, None] + dBx
+        ys[:, t] = np.einsum("bn,bhnp->bhp", Cn[:, t], h)
+    np.testing.assert_allclose(np.asarray(y), ys, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(hf), h, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    S=st.sampled_from([32, 48, 64, 96]),
+    H=st.integers(1, 3),
+    P=st.sampled_from([8, 16]),
+    N=st.sampled_from([4, 8]),
+    chunk=st.sampled_from([16, 32]),
+)
+def test_ssd_scan_property(S, H, P, N, chunk):
+    x, dt, A, Bm, Cm = _ssd_inputs(1, S, H, P, N, seed=S + H + P + N)
+    y = ssd_scan(x, dt, A, Bm, Cm, chunk=chunk, interpret=True)
+    yr = ssd_ref(x, dt, A, Bm, Cm, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=3e-4, atol=3e-4)

@@ -1,0 +1,106 @@
+"""Per-architecture smoke tests: one forward/train step on CPU with a
+reduced same-family config — asserts output shapes + no NaNs (assignment
+requirement), plus prefill/decode consistency for the serving path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import smoke_batch, smoke_bundle
+from repro.configs import ARCHS
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_shapes_and_finite(arch):
+    cfg, model, params = smoke_bundle(arch)
+    batch = smoke_batch(cfg)
+    loss, metrics = model.train_loss(params, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), (arch, float(loss))
+    assert float(loss) > 0.0
+    assert "loss" in metrics
+    # one full optimizer step, gradients finite
+    grads = jax.grad(lambda p: model.train_loss(p, batch)[0])(params)
+    flat = jax.tree.leaves(grads)
+    assert all(bool(jnp.all(jnp.isfinite(g))) for g in flat), arch
+    assert any(float(jnp.abs(g).max()) > 0 for g in flat), arch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_matches_decode(arch):
+    """Prefill and decode agree on next-token logits.
+
+    * dense/ssm/hybrid: prefill(prompt) == token-by-token decode from an
+      empty cache (full-path equivalence).
+    * encdec/vlm: the frontend context (cross-attn cache / patch prefix)
+      only exists via prefill, so we check prefill(S-1) + one decode step
+      == prefill(S) — continuation consistency.
+    * moe: skipped — batched prefill and stepwise decode see different
+      routing-group boundaries, so capacity drops legitimately differ;
+      serving consistency for MoE is covered by the engine's batching-
+      invariance test instead.
+    """
+    cfg, model, params = smoke_bundle(arch)
+    if cfg.family == "moe":
+        pytest.skip("MoE capacity drops differ across batching (see doc)")
+    B, S = 2, 8
+    batch = smoke_batch(cfg, batch=B, seq=S, train=False)
+    logits_p, cache_p = model.prefill(params, batch, max_len=32)
+    assert logits_p.shape[0] == B and logits_p.shape[-1] == cfg.vocab_size
+    toks = batch["tokens"]
+
+    if cfg.family in ("encdec", "vlm"):
+        short = dict(batch)
+        short["tokens"] = toks[:, :-1]
+        _, cache = model.prefill(params, short, max_len=32)
+        logits_d, _ = model.decode_step(params, cache, toks[:, -1:])
+    else:
+        cache = model.init_cache(B, 32)
+        logits_d = None
+        for i in range(S):
+            logits_d, cache = model.decode_step(params, cache,
+                                                toks[:, i:i + 1])
+    np.testing.assert_allclose(
+        np.asarray(logits_p[:, -1], np.float32),
+        np.asarray(logits_d[:, -1], np.float32),
+        rtol=2e-2, atol=2e-2, err_msg=arch)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_batch_row_independence(arch):
+    """Row 0's loss gradient path doesn't leak into row 1 (SPMD sanity)."""
+    cfg, model, params = smoke_bundle(arch)
+    b1 = smoke_batch(cfg, batch=2, seq=16)
+    b2 = {k: v.copy() for k, v in b1.items()}
+    b2["tokens"] = b2["tokens"].at[1].set((b2["tokens"][1] + 11)
+                                          % cfg.vocab_size)
+    # decode row 0 with different row-1 contents: logits row 0 unchanged
+    l1, c1 = model.prefill(params, {k: v[:, :8] if k == "tokens" else v
+                                    for k, v in b1.items()}, max_len=16)
+    l2, c2 = model.prefill(params, {k: v[:, :8] if k == "tokens" else v
+                                    for k, v in b2.items()}, max_len=16)
+    np.testing.assert_allclose(np.asarray(l1[0], np.float32),
+                               np.asarray(l2[0], np.float32),
+                               rtol=1e-5, atol=1e-5, err_msg=arch)
+
+
+def test_kernel_paths_match_xla_paths():
+    for arch in ("tinyllama-1.1b", "mamba2-130m"):
+        cfg, model, params = smoke_bundle(arch)
+        from repro.models.api import build_model
+        mk = build_model(cfg.replace(use_kernels=True))
+        batch = smoke_batch(cfg)
+        l0 = float(model.train_loss(params, batch)[0])
+        l1 = float(mk.train_loss(params, batch)[0])
+        assert abs(l0 - l1) < 1e-3, (arch, l0, l1)
+
+
+def test_moe_sort_strategy_close_to_einsum():
+    cfg, _, params = smoke_bundle("dbrx-132b")
+    from repro.models.api import build_model
+    me = build_model(cfg, moe_strategy="einsum")
+    ms = build_model(cfg, moe_strategy="sort")
+    batch = smoke_batch(cfg)
+    le = float(me.train_loss(params, batch)[0])
+    ls = float(ms.train_loss(params, batch)[0])
+    assert abs(le - ls) < 5e-3, (le, ls)

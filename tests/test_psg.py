@@ -1,0 +1,157 @@
+"""PSG construction + contraction: unit and property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (COMM, COMP, LOOP, PSG, build_psg, contract)
+from repro.core.graph import Vertex
+from repro.core.psg import top_level_order
+
+
+def _example_fn(x, w):
+    def body(c, _):
+        c = jnp.tanh(c @ w)
+        return c, None
+    c, _ = jax.lax.scan(body, x, None, length=4)
+    z = jnp.where(jnp.sum(c) > 0, jnp.sum(c * c), jnp.sum(c))
+    return z
+
+
+def test_build_psg_kinds_and_structure():
+    x = jnp.ones((4, 8))
+    w = jnp.ones((8, 8))
+    psg = build_psg(_example_fn, x, w)
+    stats = psg.stats()
+    assert stats["Loop"] >= 1            # the scan
+    assert stats["Comp"] >= 2
+    assert stats["total"] == len(psg.vertices)
+    # loop body vertices are children of the Loop vertex
+    loop = psg.by_kind(LOOP)[0]
+    kids = psg.children(loop.vid)
+    assert kids, "loop must have children"
+    # flops rolled up: loop flops = trips x body flops
+    body_flops = sum(psg.vertices[k].flops for k in kids)
+    assert loop.flops == pytest.approx(4 * body_flops)
+
+
+def test_psg_source_attribution():
+    x, w = jnp.ones((4, 8)), jnp.ones((8, 8))
+    psg = build_psg(_example_fn, x, w)
+    srcs = [v.source for v in psg.vertices if v.source]
+    assert any("test_psg.py" in s for s in srcs)
+
+
+def test_psg_json_roundtrip():
+    x, w = jnp.ones((4, 8)), jnp.ones((8, 8))
+    psg = build_psg(_example_fn, x, w)
+    clone = PSG.from_json(psg.to_json())
+    assert clone.stats() == psg.stats()
+    assert clone.edges == psg.edges
+    assert [v.kind for v in clone.vertices] == [v.kind for v in psg.vertices]
+
+
+def test_contraction_reduces_and_preserves():
+    x, w = jnp.ones((4, 8)), jnp.ones((8, 8))
+    psg = build_psg(_example_fn, x, w)
+    cpsg, mapping = contract(psg, max_loop_depth=10)
+    assert len(cpsg.vertices) <= len(psg.vertices)
+    # every original vertex maps somewhere
+    assert set(mapping) >= {v.vid for v in psg.vertices}
+    # total flops conserved at the top level
+    orig = sum(v.flops for v in psg.vertices if v.parent == psg.root)
+    got = sum(v.flops for v in cpsg.vertices if v.parent == cpsg.root)
+    assert got == pytest.approx(orig)
+
+
+def test_contraction_depth_pruning():
+    def nested(x):
+        def outer(c, _):
+            def inner(c2, _):
+                return jnp.tanh(c2) * 1.5, None
+            c2, _ = jax.lax.scan(inner, c, None, length=3)
+            return c2, None
+        c, _ = jax.lax.scan(outer, x, None, length=2)
+        return jnp.sum(c)
+
+    psg = build_psg(nested, jnp.ones((4,)))
+    deep, _ = contract(psg, max_loop_depth=10)
+    shallow, _ = contract(psg, max_loop_depth=1)
+    assert shallow.stats()["Loop"] < deep.stats()["Loop"]
+    # pruning folds, not drops: flops conserved
+    f_deep = sum(v.flops for v in deep.vertices if v.parent == deep.root)
+    f_shallow = sum(v.flops for v in shallow.vertices
+                    if v.parent == shallow.root)
+    assert f_shallow == pytest.approx(f_deep)
+
+
+# ---------------------------------------------------------------------------
+# property: contraction invariants on random synthetic PSGs
+# ---------------------------------------------------------------------------
+
+@st.composite
+def random_psg(draw):
+    g = PSG()
+    root = g.new_vertex("Root", "root")
+    g.root = root.vid
+    frontier = [root.vid]
+    n = draw(st.integers(5, 40))
+    for i in range(n):
+        parent = draw(st.sampled_from(frontier))
+        kind = draw(st.sampled_from([COMP, COMP, COMP, LOOP, COMM]))
+        depth = g.vertices[parent].depth + (1 if parent != root.vid else 0)
+        v = g.new_vertex(kind, kind.lower(), parent=parent, depth=depth)
+        if kind == COMP:
+            v.flops = float(draw(st.integers(0, 1000)))
+        if kind == COMM:
+            v.comm_bytes = float(draw(st.integers(1, 10_000)))
+            v.comm_kind = "all_reduce"
+        if kind == LOOP:
+            frontier.append(v.vid)
+    # chain data edges among siblings
+    for parent in {v.parent for v in g.vertices if v.parent >= 0}:
+        kids = g.children(parent)
+        for a, b in zip(kids, kids[1:]):
+            g.add_edge(a, b, "data")
+        for k in kids:
+            g.add_edge(parent, k, "control")
+
+    # roll up Loop counters (mirrors build_psg._rollup with trip=1)
+    def rollup(vid):
+        v = g.vertices[vid]
+        kids = g.children(vid)
+        for k in kids:
+            rollup(k)
+        if v.kind == LOOP:
+            v.flops = sum(g.vertices[k].flops for k in kids)
+            v.comm_bytes = sum(g.vertices[k].comm_bytes for k in kids)
+    for k in g.children(root.vid):
+        rollup(k)
+    return g
+
+
+@settings(max_examples=30, deadline=None)
+@given(psg=random_psg(), depth=st.integers(0, 4))
+def test_contract_properties(psg, depth):
+    cpsg, mapping = contract(psg, max_loop_depth=depth)
+    # 1. all Comm vertices preserved verbatim
+    assert len(cpsg.by_kind(COMM)) == len(psg.by_kind(COMM))
+    assert (sum(v.comm_bytes for v in cpsg.by_kind(COMM))
+            == pytest.approx(sum(v.comm_bytes for v in psg.by_kind(COMM))))
+    # 2. never grows
+    assert len(cpsg.vertices) <= len(psg.vertices)
+    # 3. mapping total
+    assert set(mapping) >= {v.vid for v in psg.vertices}
+    # 4. top-level flops conserved
+    def subtree_flops(g, vid):
+        v = g.vertices[vid]
+        kids = g.children(vid)
+        if v.kind == LOOP and kids:
+            return v.flops                  # already rolled up
+        if kids:
+            return v.flops + sum(subtree_flops(g, k) for k in kids)
+        return v.flops
+    orig = sum(subtree_flops(psg, k) for k in psg.children(psg.root))
+    got = sum(subtree_flops(cpsg, k) for k in cpsg.children(cpsg.root))
+    assert got == pytest.approx(orig, rel=1e-6)
