@@ -1,0 +1,17 @@
+PYTHONPATH := src:.
+export PYTHONPATH
+
+.PHONY: check test smoke bench
+
+test:
+	python -m pytest -x -q
+
+smoke:
+	python -m benchmarks.run --smoke
+
+# tier-1 tests + the graph-core smoke benchmark (its internal O(P)
+# comm-storage assertion makes perf regressions fail loudly)
+check: test smoke
+
+bench:
+	python -m benchmarks.run

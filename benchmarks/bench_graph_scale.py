@@ -1,0 +1,117 @@
+"""Graph-core scalability: build + detect + backtrack at 512..8192 procs.
+
+The indexed-graph acceptance benchmark: a synthetic-but-realistic training
+step PSG (comp chain + halo-exchange p2p ring + grouped and global
+collectives) is simulated with an injected straggler, then the full
+post-mortem pipeline runs at 512/2048/8192 processes.  Reported per scale:
+
+  * wall time for PPG build (simulate), detection, and backtracking;
+  * ``ppg.nbytes()`` and the comm-dependence share of it — collective
+    dependence is stored as participant groups, so comm bytes grow O(P),
+    not O(P²) (asserted: a materialized 8192-clique would need >1 GB).
+
+Pure numpy: imports only the lazy analysis layer of `repro.core`, so it
+runs without jax — fast and safe for `run.py --smoke` / `make check`.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import (COMM, COMP, PSG, backtrack, detect_abnormal,
+                        detect_non_scalable, root_causes)
+from repro.core.inject import simulate, simulate_series
+
+FULL_SCALES = (512, 2048, 8192)
+SMOKE_SCALES = (8, 32)
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    # local copy of benchmarks.common.emit: common.py imports jax + the
+    # model zoo, which this pure-numpy benchmark must not depend on
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def build_step_psg(n_comp: int = 24, n_procs_hint: int = 8) -> PSG:
+    """Synthetic train-step PSG: comp chain with a p2p halo ring, a grouped
+    reduce-scatter and a global all-reduce (the GSPMD shapes that matter)."""
+    g = PSG()
+    root = g.new_vertex("Root", "root")
+    g.root = root.vid
+    prev = None
+    for i in range(n_comp):
+        v = g.new_vertex(COMP, f"layer{i}", parent=root.vid,
+                         source=f"model.py:{100 + i}")
+        v.flops = 1e12
+        if prev is not None:
+            g.add_edge(prev, v.vid, "data")
+        g.add_edge(root.vid, v.vid, "control")
+        prev = v.vid
+        if i == n_comp // 3:                      # halo exchange ring
+            p2p = g.new_vertex(COMM, "ppermute", parent=root.vid,
+                               source="model.py:halo")
+            p2p.comm_kind, p2p.comm_bytes = "ppermute", 1e6
+            p2p.p2p_pairs = [(p, (p + 1) % n_procs_hint)
+                             for p in range(n_procs_hint)]
+            g.add_edge(prev, p2p.vid, "data")
+            g.add_edge(root.vid, p2p.vid, "control")
+            prev = p2p.vid
+        if i == 2 * n_comp // 3:                  # grouped reduce-scatter
+            rs = g.new_vertex(COMM, "reduce_scatter", parent=root.vid,
+                              source="model.py:rs")
+            rs.comm_kind, rs.comm_bytes = "reduce_scatter", 4e6
+            half = n_procs_hint // 2 or 1
+            rs.meta["replica_groups"] = [list(range(half)),
+                                         list(range(half, n_procs_hint))]
+            g.add_edge(prev, rs.vid, "data")
+            g.add_edge(root.vid, rs.vid, "control")
+            prev = rs.vid
+    ar = g.new_vertex(COMM, "psum", parent=root.vid, source="optim.py:60")
+    ar.comm_kind, ar.comm_bytes = "all_reduce", 8e6
+    g.add_edge(prev, ar.vid, "data")
+    g.add_edge(root.vid, ar.vid, "control")
+    return g
+
+
+def run(smoke: bool = False) -> None:
+    scales = SMOKE_SCALES if smoke else FULL_SCALES
+    for n_procs in scales:
+        psg = build_step_psg(n_procs_hint=n_procs)
+        target = next(v.vid for v in psg.vertices if v.kind == COMP)
+
+        t0 = time.perf_counter()
+        series = simulate_series(
+            psg, [max(n_procs // 4, 2), max(n_procs // 2, 2), n_procs],
+            lambda p, vid, n: (0.128 / n)
+            + (0.05 if (p == min(4, n_procs - 1) and vid == target) else 0.0))
+        build_s = time.perf_counter() - t0
+        top = series[n_procs]
+
+        t0 = time.perf_counter()
+        ns = detect_non_scalable(series)
+        ab = detect_abnormal(top)
+        detect_s = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        paths = backtrack(top, ns, ab)
+        rcs = root_causes(paths, psg, ppg=top)
+        backtrack_s = time.perf_counter() - t0
+
+        nbytes = top.nbytes()
+        comm_nbytes = top.comm.nbytes()
+        clique_nbytes = 16 * sum(
+            sum(len(g_) * (len(g_) - 1) for g_ in top.comm.groups_of(v.vid))
+            for v in psg.by_kind(COMM))
+        # O(P) guarantee: implicit groups, never the materialized clique
+        assert comm_nbytes < 64 * len(psg.vertices) * n_procs, \
+            f"comm storage not O(P): {comm_nbytes} bytes at {n_procs} procs"
+        found = any(node[1] == target for node, _, _ in rcs)
+        emit(f"graph_scale/{n_procs}procs",
+             (build_s + detect_s + backtrack_s) * 1e6,
+             f"build_s={build_s:.3f};detect_s={detect_s:.3f};"
+             f"backtrack_s={backtrack_s:.3f};ppg_bytes={nbytes};"
+             f"comm_bytes={comm_nbytes};clique_equiv_bytes={clique_nbytes};"
+             f"paths={len(paths)};root_cause_found={found}")
+
+
+if __name__ == "__main__":
+    run()

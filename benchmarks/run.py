@@ -9,6 +9,10 @@ Prints ``name,us_per_call,derived`` CSV lines.
   bench_detect     Table IV   (post-mortem detection cost)
   bench_casestudy  §VI-D      (root-cause case studies)
   bench_roofline   deliverable (g): roofline terms from the dry-run
+  bench_graph_scale  graph-core scalability (512/2048/8192 procs)
+
+``--smoke`` runs only the fast pure-numpy graph-core benchmark at tiny
+scales — the perf-regression canary wired into ``make check``.
 """
 from __future__ import annotations
 
@@ -21,13 +25,23 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma-separated subset (psg,static,overhead,"
-                         "storage,detect,casestudy,roofline)")
+                         "storage,detect,casestudy,roofline,graph_scale)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast mode: graph-core benchmark at tiny scales, "
+                         "no jax model workloads")
     args = ap.parse_args()
+
+    from benchmarks import bench_graph_scale
+    if args.smoke:
+        print("name,us_per_call,derived")
+        bench_graph_scale.run(smoke=True)
+        return
 
     from benchmarks import (bench_casestudy, bench_detect, bench_overhead,
                             bench_psg, bench_roofline, bench_serving,
                             bench_static, bench_storage)
     suite = {
+        "graph_scale": bench_graph_scale.run,
         "roofline": bench_roofline.run,
         "serving": bench_serving.run,
         "psg": bench_psg.run,

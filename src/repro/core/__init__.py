@@ -3,36 +3,67 @@
 Pipeline:  build_psg (static, jaxpr) -> contract -> [GraphProfiler runtime
 sampling | annotate_from_hlo comm refinement] -> build_ppg -> detect
 (non-scalable + abnormal) -> backtrack (Algorithm 1) -> render_report.
-"""
-from repro.core.backtrack import Path, backtrack, backtrack_one, root_causes
-from repro.core.commdep import CommLog, add_comm_edges, annotate_from_hlo
-from repro.core.contraction import contract
-from repro.core.detect import (
-    Abnormal,
-    NonScalable,
-    detect_abnormal,
-    detect_non_scalable,
-    fit_loglog,
-)
-from repro.core.graph import (
-    BRANCH, CALL, COMM, COMP, LOOP, ROOT,
-    PPG, PSG, PerfVector, Vertex,
-)
-from repro.core.hlo import collective_bytes_total, parse_collectives
-from repro.core.inject import simulate, simulate_series
-from repro.core.ppg import build_ppg
-from repro.core.profiler import GraphProfiler
-from repro.core.psg import build_psg
-from repro.core.report import render_report
 
-__all__ = [
-    "PSG", "PPG", "Vertex", "PerfVector",
-    "LOOP", "BRANCH", "CALL", "COMP", "COMM", "ROOT",
-    "build_psg", "contract", "GraphProfiler",
-    "annotate_from_hlo", "CommLog", "add_comm_edges",
-    "parse_collectives", "collective_bytes_total",
-    "build_ppg", "simulate", "simulate_series",
-    "detect_non_scalable", "detect_abnormal", "NonScalable", "Abnormal",
-    "fit_loglog", "backtrack", "backtrack_one", "root_causes", "Path",
-    "render_report",
-]
+Exports resolve lazily (PEP 562) so the pure-numpy analysis layer (graph /
+detect / backtrack / inject / contraction) can be imported without paying
+for — or even having — jax, which only the static/profiling channels
+(psg.build_psg, GraphProfiler) need.
+"""
+from typing import TYPE_CHECKING
+
+# export name -> submodule that defines it
+_EXPORTS = {
+    "Path": "backtrack", "backtrack": "backtrack",
+    "backtrack_one": "backtrack", "root_causes": "backtrack",
+    "CommLog": "commdep", "add_comm_edges": "commdep",
+    "annotate_from_hlo": "commdep",
+    "contract": "contraction",
+    "Abnormal": "detect", "NonScalable": "detect",
+    "detect_abnormal": "detect", "detect_non_scalable": "detect",
+    "fit_loglog": "detect",
+    "BRANCH": "graph", "CALL": "graph", "COMM": "graph", "COMP": "graph",
+    "LOOP": "graph", "ROOT": "graph",
+    "CommIndex": "graph", "EdgeSet": "graph", "PPG": "graph", "PSG": "graph",
+    "PerfStore": "graph", "PerfVector": "graph", "Vertex": "graph",
+    "collective_bytes_total": "hlo", "parse_collectives": "hlo",
+    "simulate": "inject", "simulate_series": "inject",
+    "build_ppg": "ppg",
+    "GraphProfiler": "profiler",
+    "build_psg": "psg",
+    "render_report": "report",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name):
+    target = _EXPORTS.get(name)
+    if target is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+    module = importlib.import_module(f"{__name__}.{target}")
+    value = getattr(module, name)
+    globals()[name] = value           # cache: resolve each name once
+    return value
+
+
+def __dir__():
+    return __all__
+
+
+if TYPE_CHECKING:                     # static analyzers see eager imports
+    from repro.core.backtrack import (Path, backtrack, backtrack_one,
+                                      root_causes)
+    from repro.core.commdep import CommLog, add_comm_edges, annotate_from_hlo
+    from repro.core.contraction import contract
+    from repro.core.detect import (Abnormal, NonScalable, detect_abnormal,
+                                   detect_non_scalable, fit_loglog)
+    from repro.core.graph import (BRANCH, CALL, COMM, COMP, LOOP, ROOT,
+                                  CommIndex, EdgeSet, PPG, PSG, PerfStore,
+                                  PerfVector, Vertex)
+    from repro.core.hlo import collective_bytes_total, parse_collectives
+    from repro.core.inject import simulate, simulate_series
+    from repro.core.ppg import build_ppg
+    from repro.core.profiler import GraphProfiler
+    from repro.core.psg import build_psg
+    from repro.core.report import render_report

@@ -22,6 +22,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
+import numpy as np
+
 from repro.core.detect import Abnormal, NonScalable
 from repro.core.graph import BRANCH, CALL, COMM, LOOP, PPG, PSG
 
@@ -45,10 +47,7 @@ class Path:
 
 
 def _wait_of(ppg: PPG, node: Node) -> float:
-    vec = ppg.perf.get(node)
-    if vec is None:
-        return 0.0
-    return float(vec.counters.get(WAIT_COUNTER, 0.0))
+    return ppg.perf.counter_at(WAIT_COUNTER, *node)
 
 
 def _is_collective(psg: PSG, vid: int) -> bool:
@@ -142,9 +141,9 @@ def backtrack(ppg: PPG, non_scalable: Sequence[NonScalable],
     abnormal vertices."""
     scanned: Set[Node] = set()
     paths: List[Path] = []
+    tm = ppg.times_matrix()
     for n in non_scalable:
-        times = ppg.times_across_procs(n.vid)
-        proc = max(range(ppg.n_procs), key=lambda p: times[p]) if times else 0
+        proc = int(tm[:, n.vid].argmax()) if tm.size else 0
         p = backtrack_one(ppg, (proc, n.vid), reason="non_scalable",
                           scanned=scanned)
         if p.nodes:
@@ -159,31 +158,33 @@ def backtrack(ppg: PPG, non_scalable: Sequence[NonScalable],
     return paths
 
 
-def _anomaly_score(ppg: PPG, node: Node) -> float:
+def _anomaly_score(ppg: PPG, node: Node,
+                   busy: Optional[np.ndarray] = None) -> float:
     """BUSY time above the cross-process typical for this vertex.
 
     A propagated delay leaves every downstream vertex time-NORMAL (they
     run at base speed, just later) and surfaces as WAITING at comm
     vertices — which are symptoms, not causes.  Scoring busy time
     (time - wait) makes the most anomalous node on a causal path the
-    worker that actually ran long, i.e. the root-cause candidate."""
-    vec = ppg.perf.get(node)
-    if vec is None:
+    worker that actually ran long, i.e. the root-cause candidate.
+
+    ``busy`` is the precomputed (n_procs, V) time-minus-wait matrix; pass
+    it when scoring many nodes so each call is one column reduction."""
+    if node not in ppg.perf:
         return 0.0
-
-    def busy(p: int) -> float:
-        v = ppg.perf.get((p, node[1]))
-        if v is None:
-            return 0.0
-        return v.time - float(v.counters.get(WAIT_COUNTER, 0.0))
-
-    mine = busy(node[0])
-    others = sorted(b for p in range(ppg.n_procs)
-                    if (b := busy(p)) > 0.0)
-    if not others:
+    if busy is None:
+        busy = _busy_matrix(ppg)
+    proc, vid = node
+    col = busy[:, vid]
+    mine = float(col[proc])
+    others = np.sort(col[col > 0.0])           # unset entries are 0: excluded
+    if others.size == 0:
         return mine
-    typical = others[len(others) // 2]
-    return mine - typical
+    return mine - float(others[others.size // 2])
+
+
+def _busy_matrix(ppg: PPG) -> np.ndarray:
+    return ppg.times_matrix() - ppg.counter_matrix(WAIT_COUNTER)
 
 
 def root_causes(paths: Sequence[Path], psg: PSG, top_k: int = 5,
@@ -195,11 +196,18 @@ def root_causes(paths: Sequence[Path], psg: PSG, top_k: int = 5,
     raw Algorithm-1 endpoint).  Ranked by path count, then score."""
     counts: Dict[Node, int] = {}
     scores: Dict[Node, float] = {}
+    busy = _busy_matrix(ppg) if ppg is not None else None
+    memo: Dict[Node, float] = {}
+
+    def score(n: Node) -> float:
+        if n not in memo:
+            memo[n] = _anomaly_score(ppg, n, busy)
+        return memo[n]
+
     for p in paths:
         if ppg is not None and p.nodes:
-            node = max(p.nodes, key=lambda n: _anomaly_score(ppg, n))
-            scores[node] = max(scores.get(node, 0.0),
-                               _anomaly_score(ppg, node))
+            node = max(p.nodes, key=score)
+            scores[node] = max(scores.get(node, 0.0), score(node))
         else:
             node = p.root_cause
         counts[node] = counts.get(node, 0) + 1

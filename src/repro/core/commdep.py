@@ -18,7 +18,7 @@ import dataclasses
 import random
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from repro.core.graph import COMM, LOOP, PSG, PPG
+from repro.core.graph import BRANCH, CALL, COMM, LOOP, PSG, PPG
 from repro.core.hlo import CollectiveOp, parse_collectives, scope_tokens
 
 _EVENT_BYTES = 64      # what one uncompressed trace event would cost on disk
@@ -29,13 +29,16 @@ def _find_scope_vertex(psg: PSG, op: CollectiveOp) -> int:
     whose name appears in the op scope path (e.g. 'while' loops)."""
     tokens = scope_tokens(op.op_name)
     best = psg.root
-    best_depth = -1
-    for v in psg.vertices:
-        if not v.is_control:
-            continue
-        base = v.name.split(":")[0]
-        if base in tokens and v.depth > best_depth:
-            best, best_depth = v.vid, v.depth
+    best_depth, best_vid = -1, -1
+    for kind in (LOOP, BRANCH, CALL):     # kind index: skips Comp/Comm bulk
+        for v in psg.by_kind(kind):
+            base = v.name.split(":")[0]
+            if base not in tokens:
+                continue
+            # deepest wins; depth ties go to the lowest vid (program order)
+            if v.depth > best_depth or (v.depth == best_depth
+                                        and v.vid < best_vid):
+                best, best_depth, best_vid = v.vid, v.depth, v.vid
     return best
 
 
@@ -114,7 +117,11 @@ class CommLog:
 # ---------------------------------------------------------------------------
 
 def add_comm_edges(ppg: PPG, psg: Optional[PSG] = None) -> None:
-    """Materialize inter-process edges for every Comm vertex in the PSG."""
+    """Register inter-process dependence for every Comm vertex in the PSG.
+
+    Collectives record their participant group (O(|group|) storage, clique
+    edges resolved lazily by ``PPG.comm_partners``); p2p pairs become
+    explicit edges."""
     psg = psg or ppg.psg
     for v in psg.by_kind(COMM):
         if v.p2p_pairs:

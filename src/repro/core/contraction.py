@@ -117,13 +117,15 @@ def _filter(psg: PSG, keep: Set[int]) -> Tuple[PSG, Dict[int, int]]:
             continue
         nv = out.new_vertex(v.kind, v.name, source=v.source,
                             parent=-1, depth=v.depth)
-        nv.prims, nv.flops, nv.bytes = v.prims, v.flops, v.bytes
+        # copy container fields: sharing them would alias the source PSG,
+        # so mutating the filtered graph corrupts the original
+        nv.prims, nv.flops, nv.bytes = list(v.prims), v.flops, v.bytes
         nv.comm_kind, nv.comm_bytes = v.comm_kind, v.comm_bytes
-        nv.p2p_pairs, nv.meta = v.p2p_pairs, v.meta
+        nv.p2p_pairs, nv.meta = list(v.p2p_pairs), dict(v.meta)
         submap[v.vid] = nv.vid
     for v in psg.vertices:
         if v.vid in submap and v.parent in submap:
-            out.vertices[submap[v.vid]].parent = submap[v.parent]
+            out.set_parent(submap[v.vid], submap[v.parent])
     out.root = submap[psg.root]
     return out, submap
 

@@ -7,11 +7,18 @@
 
 * Abnormal vertices: per-vertex times across processes at one scale;
   processes above AbnormThd x median are flagged.
+
+Complexity: both detectors are vectorized over the PPG's dense (n_procs,
+n_vertices) time matrices — cross-process merges, the log-log slope fit,
+and abnormality thresholding are batched numpy reductions, O(P*V) work
+with no per-(proc, vertex) Python loops.  Only flagged entries (<= top_k
+in practice) materialize Python objects.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
 from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
@@ -44,6 +51,7 @@ class Abnormal:
 
 
 def _merge(times: Sequence[float], strategy: str) -> float:
+    """Scalar reference merge (see ``_merge_matrix`` for the batched path)."""
     arr = np.asarray([t for t in times if t > 0.0])
     if arr.size == 0:
         return 0.0
@@ -54,7 +62,9 @@ def _merge(times: Sequence[float], strategy: str) -> float:
     if strategy == "max":
         return float(arr.max())
     if strategy == "p0":
-        return float(times[0])
+        # proc-0's reading when alive; a dead proc-0 (t == 0) falls back to
+        # the mean of live readings instead of silently dropping the vertex
+        return float(times[0]) if times[0] > 0.0 else float(arr.mean())
     if strategy == "cluster":
         # 2-means along sorted values; report the larger cluster's mean
         s = np.sort(arr)
@@ -65,6 +75,40 @@ def _merge(times: Sequence[float], strategy: str) -> float:
                 best_gap, best_cut = gap, i
         hi = s[best_cut:] if best_cut is not None else s
         return float(hi.mean())
+    raise ValueError(strategy)
+
+
+def _merge_matrix(t: np.ndarray, strategy: str) -> np.ndarray:
+    """Columnwise ``_merge`` over a (n_procs, V) time matrix -> (V,)."""
+    n_procs, V = t.shape
+    pos = t > 0.0
+    cnt = pos.sum(axis=0)
+    any_pos = cnt > 0
+    if strategy in ("mean", "p0"):
+        s = t.sum(axis=0, where=pos)
+        mean = np.divide(s, cnt, out=np.zeros(V), where=any_pos)
+        if strategy == "mean":
+            return mean
+        p0 = t[0] if n_procs else np.zeros(V)
+        return np.where(p0 > 0.0, p0, mean)
+    if strategy == "median":
+        masked = np.where(pos, t, np.nan)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", RuntimeWarning)
+            med = np.nanmedian(masked, axis=0)
+        return np.where(any_pos, med, 0.0)
+    if strategy == "max":
+        return np.where(any_pos, t.max(axis=0, initial=0.0), 0.0)
+    if strategy == "cluster":
+        out = np.zeros(V)
+        for v in np.nonzero(any_pos)[0]:
+            s = np.sort(t[pos[:, v], v])
+            if s.size == 1:
+                out[v] = s[0]
+            else:
+                cut = int(np.argmax(np.diff(s))) + 1
+                out[v] = s[cut:].mean()
+        return out
     raise ValueError(strategy)
 
 
@@ -82,6 +126,27 @@ def fit_loglog(scales: Sequence[int], times: Sequence[float]
     return math.exp(loga), float(b)
 
 
+def _fit_slopes(scales: Sequence[int], M: np.ndarray,
+                valid: np.ndarray) -> np.ndarray:
+    """Batched least-squares slope of log t vs log p per column.
+
+    M is (S, V) merged times, valid the (S, V) mask of usable points;
+    columns with < 2 valid points get slope 0.0 (matching ``fit_loglog``).
+    """
+    S, V = M.shape
+    x = np.log(np.asarray(scales, float))[:, None]          # (S, 1)
+    Y = np.where(valid, np.log(np.where(valid, M, 1.0)), 0.0)
+    n = valid.sum(axis=0)
+    Sx = (x * valid).sum(axis=0)
+    Sy = Y.sum(axis=0)
+    Sxx = (x * x * valid).sum(axis=0)
+    Sxy = (x * Y).sum(axis=0)
+    denom = n * Sxx - Sx ** 2
+    num = n * Sxy - Sx * Sy
+    slope = np.divide(num, denom, out=np.zeros(V), where=denom != 0)
+    return np.where(n >= 2, slope, 0.0)
+
+
 def detect_non_scalable(series: Mapping[int, PPG], *,
                         ideal_slope: float = -1.0,
                         slope_margin: float = 0.35,
@@ -95,26 +160,38 @@ def detect_non_scalable(series: Mapping[int, PPG], *,
         return []
     ref = series[scales[-1]]
     psg = ref.psg
-    total_max = sum(max(ref.times_across_procs(v.vid) or [0.0])
-                    for v in psg.vertices if v.parent == psg.root) or 1e-12
+    V = len(psg.vertices)
+    top = psg.children(psg.root)
+    t_ref = ref.times_matrix()
+    total_max = float(np.sum(t_ref[:, top].max(axis=0, initial=0.0))) \
+        if top else 0.0                       # initial: safe at n_procs == 0
+    total_max = total_max or 1e-12
+
+    S = len(scales)
+    M = np.zeros((S, V))                     # merged time per (scale, vertex)
+    present = np.zeros((S, V), bool)         # vertex exists at that scale
+    for si, p in enumerate(scales):
+        ppg = series[p]
+        vp = min(len(ppg.psg.vertices), V)
+        if vp:
+            M[si, :vp] = _merge_matrix(ppg.times_matrix()[:, :vp], strategy)
+            present[si, :vp] = True
+
+    slope = _fit_slopes(scales, M, (M > 0.0) & present)
+    share = M[-1] / total_max
+    deviation = slope - ideal_slope
+    flagged = (M.sum(axis=0) > 0.0) & (deviation > slope_margin) \
+        & (share >= min_share)
 
     out: List[NonScalable] = []
-    for v in psg.vertices:
-        merged: Dict[int, float] = {}
-        for p in scales:
-            ppg = series[p]
-            if v.vid < len(ppg.psg.vertices):
-                merged[p] = _merge(ppg.times_across_procs(v.vid), strategy)
-        if sum(merged.values()) <= 0:
-            continue
-        _, slope = fit_loglog(list(merged), list(merged.values()))
-        share = merged.get(scales[-1], 0.0) / total_max
-        deviation = slope - ideal_slope
-        if deviation > slope_margin and share >= min_share:
-            out.append(NonScalable(
-                vid=v.vid, slope=slope, share=share,
-                score=deviation * share, times=merged,
-                kind=v.kind, name=v.name, source=v.source))
+    for vid in np.nonzero(flagged)[0]:
+        v = psg.vertices[vid]
+        merged = {scales[si]: float(M[si, vid])
+                  for si in range(S) if present[si, vid]}
+        out.append(NonScalable(
+            vid=int(vid), slope=float(slope[vid]), share=float(share[vid]),
+            score=float(deviation[vid] * share[vid]), times=merged,
+            kind=v.kind, name=v.name, source=v.source))
     out.sort(key=lambda d: -d.score)
     return out[:top_k]
 
@@ -123,28 +200,29 @@ def detect_abnormal(ppg: PPG, *, abnorm_thd: float = 1.3,
                     min_share: float = 0.01,
                     top_k: int = 20) -> List[Abnormal]:
     psg = ppg.psg
-    step_time = max(
-        sum(ppg.get_time(p, v.vid) for v in psg.vertices
-            if v.parent == psg.root)
-        for p in range(ppg.n_procs)) or 1e-12
+    if not len(psg.vertices) or not ppg.n_procs:
+        return []
+    t = ppg.times_matrix()                             # (P, V)
+    top = psg.children(psg.root)
+    step_time = float(t[:, top].sum(axis=1).max()) if top else 0.0
+    step_time = step_time or 1e-12
+
+    typical = np.median(t, axis=0)                     # (V,)
+    active = t.max(axis=0) > 0.0
+    over = (typical > 0.0) & (t > abnorm_thd * typical) \
+        & ((t - typical) / step_time >= min_share)
+    dead_typical = (typical == 0.0) & (t / step_time >= min_share)
+    flags = (over | dead_typical) & active
+
     out: List[Abnormal] = []
-    for v in psg.vertices:
-        times = ppg.times_across_procs(v.vid)
-        arr = np.asarray(times)
-        if arr.max() <= 0:
-            continue
-        typical = float(np.median(arr))
-        for proc, t in enumerate(times):
-            if typical > 0 and t > abnorm_thd * typical \
-                    and (t - typical) / step_time >= min_share:
-                out.append(Abnormal(
-                    vid=v.vid, proc=proc, time=t, typical=typical,
-                    ratio=t / typical, kind=v.kind, name=v.name,
-                    source=v.source))
-            elif typical == 0 and t / step_time >= min_share:
-                out.append(Abnormal(vid=v.vid, proc=proc, time=t,
-                                    typical=typical, ratio=float("inf"),
-                                    kind=v.kind, name=v.name,
-                                    source=v.source))
+    # (vid, proc) iteration order mirrors the scalar reference loop so the
+    # stable sort below ranks ties identically
+    for vid, proc in np.argwhere(flags.T):
+        tv, ty = float(t[proc, vid]), float(typical[vid])
+        out.append(Abnormal(
+            vid=int(vid), proc=int(proc), time=tv, typical=ty,
+            ratio=tv / ty if ty > 0 else float("inf"),
+            kind=psg.vertices[vid].kind, name=psg.vertices[vid].name,
+            source=psg.vertices[vid].source))
     out.sort(key=lambda d: -(d.time - d.typical))
     return out[:top_k]

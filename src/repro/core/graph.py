@@ -4,13 +4,32 @@ Vertex kinds follow the paper (§III-A): Loop, Branch, Call, Comp, plus Comm
 (the MPI-vertex analogue: XLA/JAX collectives).  Edges carry a dependence
 kind: 'data' (sequential data flow), 'control' (enclosing control structure)
 and — on the PPG — 'comm' (inter-process communication dependence).
+
+Complexity guarantees (the indexed graph core):
+
+* ``PSG.children`` / ``preds`` / ``succs`` / ``by_kind`` are O(result) — the
+  adjacency and kind indexes are maintained incrementally by ``new_vertex``,
+  ``add_edge`` and ``set_parent``, never by rescanning all V vertices or E
+  edges.
+* ``PPG.perf`` is a dense array store (:class:`PerfStore`): time / variance /
+  sample / counter matrices of shape (n_procs, n_vertices).
+  ``times_across_procs`` and the detectors' cross-process reductions are
+  numpy slices, O(P) memory with no per-entry Python objects.
+* Collective communication dependence is implicit: ``add_collective_edges``
+  records the participant *group* (O(|group|) storage) instead of
+  materializing the O(|group|²) clique.  ``comm_partners`` resolves partners
+  lazily; only p2p edges are stored explicitly.  At 8192 processes a single
+  all-reduce costs one 8192-entry tuple, not 67M edge tuples.
 """
 from __future__ import annotations
 
 import dataclasses
 import json
 from dataclasses import dataclass, field
-from typing import Any, Dict, Iterable, List, Optional, Sequence, Set, Tuple
+from typing import (Any, Dict, Iterable, Iterator, List, Mapping, Optional,
+                    Sequence, Set, Tuple)
+
+import numpy as np
 
 LOOP = "Loop"
 BRANCH = "Branch"
@@ -55,7 +74,59 @@ class Vertex:
         return self.kind in (LOOP, BRANCH, CALL)
 
 
-@dataclass
+class EdgeSet:
+    """Set of (src, dst, kind) edges with incrementally-maintained per-vertex
+    adjacency lists, so ``preds``/``succs`` are O(degree) not O(E)."""
+
+    __slots__ = ("_set", "_preds", "_succs")
+
+    def __init__(self, items: Iterable[Tuple[int, int, str]] = ()):
+        self._set: Set[Tuple[int, int, str]] = set()
+        self._preds: Dict[int, List[Tuple[int, str]]] = {}
+        self._succs: Dict[int, List[Tuple[int, str]]] = {}
+        for e in items:
+            self.add((e[0], e[1], e[2]))
+
+    def add(self, edge: Tuple[int, int, str]) -> None:
+        if edge in self._set:
+            return
+        self._set.add(edge)
+        s, d, k = edge
+        self._preds.setdefault(d, []).append((s, k))
+        self._succs.setdefault(s, []).append((d, k))
+
+    def preds(self, vid: int, kind: Optional[str] = None) -> List[int]:
+        lst = self._preds.get(vid, ())
+        if kind is None:
+            return [s for s, _ in lst]
+        return [s for s, k in lst if k == kind]
+
+    def succs(self, vid: int, kind: Optional[str] = None) -> List[int]:
+        lst = self._succs.get(vid, ())
+        if kind is None:
+            return [d for d, _ in lst]
+        return [d for d, k in lst if k == kind]
+
+    def __contains__(self, edge) -> bool:
+        return tuple(edge) in self._set
+
+    def __iter__(self) -> Iterator[Tuple[int, int, str]]:
+        return iter(self._set)
+
+    def __len__(self) -> int:
+        return len(self._set)
+
+    def __eq__(self, other) -> bool:
+        if isinstance(other, EdgeSet):
+            return self._set == other._set
+        if isinstance(other, (set, frozenset)):
+            return self._set == other
+        return NotImplemented
+
+    def __repr__(self) -> str:
+        return f"EdgeSet({sorted(self._set)!r})"
+
+
 class PSG:
     """Per-process program structure graph.
 
@@ -63,43 +134,79 @@ class PSG:
     edges are implied by consecutive order within the same parent; control
     edges connect a control vertex to its children.  Both are materialized
     in ``edges`` for analysis/serialization.
+
+    Adjacency (children-by-parent, preds/succs-by-kind) and kind indexes are
+    maintained incrementally; reparent vertices with :meth:`set_parent` so
+    the children index stays consistent.
     """
-    vertices: List[Vertex] = field(default_factory=list)
-    edges: Set[Tuple[int, int, str]] = field(default_factory=set)  # (src,dst,kind)
-    root: int = 0
+
+    def __init__(self, vertices: Optional[Iterable[Vertex]] = None,
+                 edges: Iterable[Tuple[int, int, str]] = (), root: int = 0):
+        self.vertices: List[Vertex] = []
+        self._edges = EdgeSet(edges)
+        self.root = root
+        self._children: Dict[int, List[int]] = {}
+        self._kind_index: Dict[str, List[int]] = {}
+        for v in vertices or ():
+            self._append_vertex(v)
 
     # ------------------------------------------------------------------
+    @property
+    def edges(self) -> EdgeSet:
+        return self._edges
+
+    @edges.setter
+    def edges(self, items: Iterable[Tuple[int, int, str]]) -> None:
+        self._edges = items if isinstance(items, EdgeSet) else EdgeSet(items)
+
+    def _append_vertex(self, v: Vertex) -> None:
+        self.vertices.append(v)
+        self._kind_index.setdefault(v.kind, []).append(v.vid)
+        if v.parent >= 0:
+            self._children.setdefault(v.parent, []).append(v.vid)
+
     def new_vertex(self, kind: str, name: str, *, source: str = "",
                    parent: int = -1, depth: int = 0, **meta) -> Vertex:
         v = Vertex(vid=len(self.vertices), kind=kind, name=name, source=source,
                    parent=parent, depth=depth)
         for k, val in meta.items():
             setattr(v, k, val) if hasattr(v, k) else v.meta.__setitem__(k, val)
-        self.vertices.append(v)
+        self._append_vertex(v)
         return v
+
+    def set_parent(self, vid: int, parent: int) -> None:
+        """Reparent a vertex, keeping the children index consistent."""
+        v = self.vertices[vid]
+        if v.parent == parent:
+            return
+        if v.parent >= 0:
+            kids = self._children.get(v.parent)
+            if kids is not None and vid in kids:
+                kids.remove(vid)
+        v.parent = parent
+        if parent >= 0:
+            self._children.setdefault(parent, []).append(vid)
 
     def add_edge(self, src: int, dst: int, kind: str = "data") -> None:
         if src != dst:
-            self.edges.add((src, dst, kind))
+            self._edges.add((src, dst, kind))
 
     def children(self, vid: int) -> List[int]:
-        return [v.vid for v in self.vertices if v.parent == vid]
+        return list(self._children.get(vid, ()))
 
     def preds(self, vid: int, kind: Optional[str] = None) -> List[int]:
-        return [s for (s, d, k) in self.edges
-                if d == vid and (kind is None or k == kind)]
+        return self._edges.preds(vid, kind)
 
     def succs(self, vid: int, kind: Optional[str] = None) -> List[int]:
-        return [d for (s, d, k) in self.edges
-                if s == vid and (kind is None or k == kind)]
+        return self._edges.succs(vid, kind)
 
     def by_kind(self, kind: str) -> List[Vertex]:
-        return [v for v in self.vertices if v.kind == kind]
+        return [self.vertices[i] for i in self._kind_index.get(kind, ())]
 
     def stats(self) -> Dict[str, int]:
         out = {k: 0 for k in KINDS}
-        for v in self.vertices:
-            out[v.kind] += 1
+        for k, vids in self._kind_index.items():
+            out[k] = len(vids)
         out["total"] = len(self.vertices)
         return out
 
@@ -107,7 +214,7 @@ class PSG:
     def to_json(self) -> str:
         return json.dumps({
             "vertices": [dataclasses.asdict(v) for v in self.vertices],
-            "edges": sorted(self.edges),
+            "edges": sorted(self._edges),
             "root": self.root,
         })
 
@@ -117,7 +224,7 @@ class PSG:
         g = cls(root=raw["root"])
         for d in raw["vertices"]:
             d["p2p_pairs"] = [tuple(p) for p in d.get("p2p_pairs", [])]
-            g.vertices.append(Vertex(**d))
+            g._append_vertex(Vertex(**d))
         g.edges = {(s, d, k) for s, d, k in raw["edges"]}
         return g
 
@@ -139,52 +246,356 @@ class PerfVector:
     counters: Dict[str, float] = field(default_factory=dict)  # PAPI analogue
 
 
-@dataclass
+class PerfStore:
+    """Dense per-(process, vertex) performance store.
+
+    Time / variance / sample-count / counter data live in (n_procs,
+    n_vertices) numpy matrices, so cross-process reductions are array
+    slices.  The old ``{(proc, vid): PerfVector}`` mapping API is preserved
+    on top: ``store[(p, vid)]`` materializes a PerfVector view on demand.
+    Columns grow automatically when vertices are added after construction.
+    """
+
+    __slots__ = ("n_procs", "_cols", "time", "time_var", "samples",
+                 "_mask", "_counters", "_cmask", "_count")
+
+    def __init__(self, n_procs: int, n_vertices: int = 0):
+        self.n_procs = int(n_procs)
+        self._cols = max(int(n_vertices), 1)
+        shape = (self.n_procs, self._cols)
+        self.time = np.zeros(shape)
+        self.time_var = np.zeros(shape)
+        self.samples = np.zeros(shape, np.int64)
+        self._mask = np.zeros(shape, bool)
+        self._counters: Dict[str, np.ndarray] = {}
+        self._cmask: Dict[str, np.ndarray] = {}
+        self._count = 0
+
+    # -- storage management --------------------------------------------
+    def _grow(self, arr: np.ndarray, cols: int) -> np.ndarray:
+        out = np.zeros((self.n_procs, cols), arr.dtype)
+        out[:, :arr.shape[1]] = arr
+        return out
+
+    def ensure_columns(self, n_vertices: int) -> None:
+        if n_vertices <= self._cols:
+            return
+        cols = max(n_vertices, 2 * self._cols)
+        self.time = self._grow(self.time, cols)
+        self.time_var = self._grow(self.time_var, cols)
+        self.samples = self._grow(self.samples, cols)
+        self._mask = self._grow(self._mask, cols)
+        for name in self._counters:
+            self._counters[name] = self._grow(self._counters[name], cols)
+            self._cmask[name] = self._grow(self._cmask[name], cols)
+        self._cols = cols
+
+    def _counter_arrays(self, name: str) -> Tuple[np.ndarray, np.ndarray]:
+        if name not in self._counters:
+            shape = (self.n_procs, self._cols)
+            self._counters[name] = np.zeros(shape)
+            self._cmask[name] = np.zeros(shape, bool)
+        return self._counters[name], self._cmask[name]
+
+    # -- matrix views (the fast path) ----------------------------------
+    def time_matrix(self, n_vertices: Optional[int] = None) -> np.ndarray:
+        """(n_procs, n_vertices) seconds; unset entries are 0.0."""
+        if n_vertices is None or n_vertices == self._cols:
+            return self.time
+        if n_vertices <= self._cols:
+            return self.time[:, :n_vertices]
+        out = np.zeros((self.n_procs, n_vertices))
+        out[:, :self._cols] = self.time
+        return out
+
+    def counter_matrix(self, name: str,
+                       n_vertices: Optional[int] = None) -> np.ndarray:
+        """(n_procs, n_vertices) counter values; unset entries are 0.0."""
+        arr = self._counters.get(name)
+        n = self._cols if n_vertices is None else n_vertices
+        if arr is None:
+            return np.zeros((self.n_procs, n))
+        if n <= self._cols:
+            return arr[:, :n]
+        out = np.zeros((self.n_procs, n))
+        out[:, :self._cols] = arr
+        return out
+
+    # -- bulk columns (simulator / replicated-profile fast path) -------
+    def set_column(self, vid: int, time, *, time_var=0.0, samples=1,
+                   counters: Optional[Mapping[str, Any]] = None,
+                   procs: Optional[np.ndarray] = None) -> None:
+        """Set a whole vertex column (optionally a proc subset) at once."""
+        self.ensure_columns(vid + 1)
+        idx = slice(None) if procs is None else procs
+        newly = np.count_nonzero(~self._mask[idx, vid])
+        self._count += int(newly)
+        self._mask[idx, vid] = True
+        self.time[idx, vid] = time
+        self.time_var[idx, vid] = time_var
+        self.samples[idx, vid] = samples
+        for name, val in (counters or {}).items():
+            arr, cmask = self._counter_arrays(name)
+            arr[idx, vid] = val
+            cmask[idx, vid] = True
+
+    def counter_at(self, name: str, p: int, vid: int,
+                   default: float = 0.0) -> float:
+        """O(1) counter read; ``default`` when the entry/counter is unset."""
+        cmask = self._cmask.get(name)
+        if cmask is None or vid >= self._cols or not cmask[p, vid]:
+            return default
+        return float(self._counters[name][p, vid])
+
+    def set_entry(self, p: int, vid: int, time: float, *, time_var=0.0,
+                  samples=1, counters: Optional[Mapping[str, float]] = None
+                  ) -> None:
+        """Scalar write without PerfVector churn (counters merge in place)."""
+        self.ensure_columns(vid + 1)
+        if not self._mask[p, vid]:
+            self._count += 1
+            self._mask[p, vid] = True
+        self.time[p, vid] = time
+        self.time_var[p, vid] = time_var
+        self.samples[p, vid] = samples
+        for name, val in (counters or {}).items():
+            arr, cmask = self._counter_arrays(name)
+            arr[p, vid] = val
+            cmask[p, vid] = True
+
+    # -- mapping API (back compat) -------------------------------------
+    def __setitem__(self, key: Tuple[int, int], vec: PerfVector) -> None:
+        p, vid = key
+        self.ensure_columns(vid + 1)
+        if not self._mask[p, vid]:
+            self._count += 1
+        self._mask[p, vid] = True
+        self.time[p, vid] = vec.time
+        self.time_var[p, vid] = vec.time_var
+        self.samples[p, vid] = vec.samples
+        # clear stale counters — value AND mask, so counter_matrix (which
+        # reads the raw arrays) never sees a leftover from the old entry
+        for name, cmask in self._cmask.items():
+            cmask[p, vid] = False
+            self._counters[name][p, vid] = 0.0
+        for name, val in vec.counters.items():
+            arr, cmask = self._counter_arrays(name)
+            arr[p, vid] = val
+            cmask[p, vid] = True
+
+    def __getitem__(self, key: Tuple[int, int]) -> PerfVector:
+        p, vid = key
+        if vid >= self._cols or not self._mask[p, vid]:
+            raise KeyError(key)
+        counters = {name: float(self._counters[name][p, vid])
+                    for name, cmask in self._cmask.items() if cmask[p, vid]}
+        return PerfVector(time=float(self.time[p, vid]),
+                          time_var=float(self.time_var[p, vid]),
+                          samples=int(self.samples[p, vid]),
+                          counters=counters)
+
+    def get(self, key: Tuple[int, int],
+            default: Optional[PerfVector] = None) -> Optional[PerfVector]:
+        try:
+            return self[key]
+        except (KeyError, IndexError):
+            return default
+
+    def __contains__(self, key: Tuple[int, int]) -> bool:
+        p, vid = key
+        return vid < self._cols and bool(self._mask[p, vid])
+
+    def __len__(self) -> int:
+        return self._count
+
+    def keys(self) -> Iterator[Tuple[int, int]]:
+        for p, vid in np.argwhere(self._mask):
+            yield (int(p), int(vid))
+
+    __iter__ = keys
+
+    def values(self) -> Iterator[PerfVector]:
+        for key in self.keys():
+            yield self[key]
+
+    def items(self) -> Iterator[Tuple[Tuple[int, int], PerfVector]]:
+        for key in self.keys():
+            yield key, self[key]
+
+    def nbytes(self) -> int:
+        base = (self.time.nbytes + self.time_var.nbytes + self.samples.nbytes
+                + self._mask.nbytes)
+        for name in self._counters:
+            base += self._counters[name].nbytes + self._cmask[name].nbytes
+        return base
+
+
+class CommIndex:
+    """Inter-process communication dependence, stored O(P) per collective.
+
+    p2p edges are explicit ((proc, vid) -> (proc, vid)) with a reverse
+    index; collectives are participant *groups* per vertex, from which
+    clique edges are resolved lazily.  Provides the old ``comm_edges`` set
+    API (membership / len / iteration) without materializing cliques.
+    """
+
+    __slots__ = ("_p2p", "_p2p_preds", "_groups", "_group_sets")
+
+    def __init__(self):
+        self._p2p: Set[Tuple[Tuple[int, int], Tuple[int, int]]] = set()
+        self._p2p_preds: Dict[Tuple[int, int], List[Tuple[int, int]]] = {}
+        self._groups: Dict[int, List[Tuple[int, ...]]] = {}
+        self._group_sets: Dict[int, List[frozenset]] = {}
+
+    # -- construction --------------------------------------------------
+    def add_p2p(self, src: Tuple[int, int], dst: Tuple[int, int]) -> None:
+        edge = (src, dst)
+        if edge in self._p2p:
+            return
+        self._p2p.add(edge)
+        self._p2p_preds.setdefault(dst, []).append(src)
+
+    def add_group(self, vid: int, procs: Sequence[int]) -> None:
+        group = tuple(procs)
+        if len(group) < 2:
+            return
+        gs = frozenset(group)
+        if any(gs == s for s in self._group_sets.get(vid, ())):
+            return
+        self._groups.setdefault(vid, []).append(group)
+        self._group_sets.setdefault(vid, []).append(gs)
+
+    # -- queries -------------------------------------------------------
+    def groups_of(self, vid: int) -> List[Tuple[int, ...]]:
+        return list(self._groups.get(vid, ()))
+
+    def group_of(self, proc: int, vid: int) -> Optional[Tuple[int, ...]]:
+        """The participant group containing ``proc`` at ``vid`` (if any)."""
+        for group, gs in zip(self._groups.get(vid, ()),
+                             self._group_sets.get(vid, ())):
+            if proc in gs:
+                return group
+        return None
+
+    def partners(self, proc: int, vid: int) -> List[Tuple[int, int]]:
+        """Reverse-edge sources of (proc, vid): p2p preds + peers from
+        EVERY group containing proc (deduplicated, like the old edge set —
+        a vertex can carry several groups, e.g. staged collectives)."""
+        out = list(self._p2p_preds.get((proc, vid), ()))
+        seen = set(out)
+        for group, gs in zip(self._groups.get(vid, ()),
+                             self._group_sets.get(vid, ())):
+            if proc not in gs:
+                continue
+            for q in group:
+                if q != proc and (q, vid) not in seen:
+                    seen.add((q, vid))
+                    out.append((q, vid))
+        return out
+
+    def p2p_edges(self) -> Set[Tuple[Tuple[int, int], Tuple[int, int]]]:
+        return self._p2p
+
+    # -- set-compatible view -------------------------------------------
+    def __contains__(self, edge) -> bool:
+        try:
+            (sp, sv), (dp, dv) = edge
+        except (TypeError, ValueError):
+            return False
+        if (tuple(edge[0]), tuple(edge[1])) in self._p2p:
+            return True
+        if sv != dv or sp == dp:
+            return False
+        for gs in self._group_sets.get(dv, ()):
+            if sp in gs and dp in gs:
+                return True
+        return False
+
+    def __len__(self) -> int:
+        n = len(self._p2p)
+        for groups in self._groups.values():
+            n += sum(len(g) * (len(g) - 1) for g in groups)
+        return n
+
+    def __iter__(self):
+        """Lazily generated edges — O(P²) to exhaust for a clique; use
+        ``partners``/``groups_of`` in hot paths."""
+        yield from self._p2p
+        for vid, groups in self._groups.items():
+            for g in groups:
+                for i in g:
+                    for j in g:
+                        if i != j:
+                            yield ((i, vid), (j, vid))
+
+    def nbytes(self) -> int:
+        """O(P) comm-dependence storage: 16B per explicit p2p edge + 8B per
+        collective participant (vs 16B x |g|² for a materialized clique)."""
+        n = 16 * len(self._p2p)
+        for groups in self._groups.values():
+            n += sum(8 * len(g) for g in groups)
+        return n
+
+
 class PPG:
     """Program performance graph: the PSG replicated across ``n_procs``
     SPMD processes + inter-process communication dependence + perf data.
 
-    PPG vertex id = (proc, vid).  Comm edges: for collectives an edge set
-    over all participants; for p2p explicit (src_proc, dst_proc) pairs.
+    PPG vertex id = (proc, vid).  Perf data lives in a dense
+    :class:`PerfStore`; collective comm dependence is implicit (participant
+    groups in a :class:`CommIndex`), p2p edges explicit.
     """
-    psg: PSG
-    n_procs: int
-    perf: Dict[Tuple[int, int], PerfVector] = field(default_factory=dict)
-    comm_edges: Set[Tuple[Tuple[int, int], Tuple[int, int]]] = \
-        field(default_factory=set)    # ((proc,vid) -> (proc,vid))
-    meta: Dict[str, Any] = field(default_factory=dict)
 
+    def __init__(self, psg: PSG, n_procs: int,
+                 perf: Optional[PerfStore] = None,
+                 meta: Optional[Dict[str, Any]] = None):
+        self.psg = psg
+        self.n_procs = int(n_procs)
+        self.perf = perf if perf is not None else \
+            PerfStore(n_procs, len(psg.vertices))
+        self.comm = CommIndex()
+        self.meta: Dict[str, Any] = dict(meta or {})
+
+    # -- perf ----------------------------------------------------------
     def set_perf(self, proc: int, vid: int, vec: PerfVector) -> None:
         self.perf[(proc, vid)] = vec
 
     def get_time(self, proc: int, vid: int) -> float:
-        v = self.perf.get((proc, vid))
-        return v.time if v else 0.0
+        if vid >= self.perf._cols:
+            return 0.0
+        return float(self.perf.time[proc, vid])
 
     def times_across_procs(self, vid: int) -> List[float]:
-        return [self.get_time(p, vid) for p in range(self.n_procs)]
+        if vid >= self.perf._cols:
+            return [0.0] * self.n_procs
+        return self.perf.time[:, vid].tolist()
+
+    def times_matrix(self) -> np.ndarray:
+        """(n_procs, n_vertices) time matrix — the detectors' input."""
+        return self.perf.time_matrix(len(self.psg.vertices))
+
+    def counter_matrix(self, name: str) -> np.ndarray:
+        return self.perf.counter_matrix(name, len(self.psg.vertices))
+
+    # -- comm dependence ------------------------------------------------
+    @property
+    def comm_edges(self) -> CommIndex:
+        """Set-like view of all comm edges (cliques resolved lazily)."""
+        return self.comm
 
     def add_collective_edges(self, vid: int,
                              procs: Optional[Sequence[int]] = None) -> None:
-        """Clique edges among participants (collective comm dependence)."""
+        """Register the participant group (implicit clique, O(|group|))."""
         procs = range(self.n_procs) if procs is None else procs
-        procs = list(procs)
-        for i in procs:
-            for j in procs:
-                if i != j:
-                    self.comm_edges.add(((i, vid), (j, vid)))
+        self.comm.add_group(vid, list(procs))
 
     def add_p2p_edge(self, src_proc: int, src_vid: int,
                      dst_proc: int, dst_vid: int) -> None:
-        self.comm_edges.add(((src_proc, src_vid), (dst_proc, dst_vid)))
+        self.comm.add_p2p((src_proc, src_vid), (dst_proc, dst_vid))
 
     def comm_partners(self, proc: int, vid: int) -> List[Tuple[int, int]]:
         """Processes/vertices this (proc, vid) depends on (reverse edges)."""
-        return [src for (src, dst) in self.comm_edges
-                if dst == (proc, vid)]
+        return self.comm.partners(proc, vid)
 
     def nbytes(self) -> int:
-        per_vec = 8 * (3 + 2 * max((len(v.counters) for v in
-                                    self.perf.values()), default=0))
-        return (self.psg.nbytes() + len(self.perf) * per_vec
-                + 16 * len(self.comm_edges))
+        return self.psg.nbytes() + self.perf.nbytes() + self.comm.nbytes()

@@ -22,7 +22,8 @@ from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.graph import BRANCH, CALL, COMM, COMP, LOOP, PPG, PSG, PerfVector
+from repro.core.graph import (BRANCH, CALL, COMM, COMP, LOOP, PPG, PSG,
+                              PerfStore, PerfVector)
 from repro.core.ppg import build_ppg
 
 # default comm model constants (tunable; roughly ICI-like)
@@ -87,12 +88,21 @@ def simulate(psg: PSG, n_procs: int,
 
     base_times(proc, vid) -> seconds for Comp/atomic-control vertices.
     inject: {(proc, vid): extra_seconds} delay injection.
+
+    Perf data is written straight into a dense :class:`PerfStore` — whole
+    (proc,)-columns at a time — so simulation cost is O(V) vectorized steps,
+    not O(P*V) Python object churn; only p2p pairs are walked sequentially
+    (their clock updates are order-dependent).
     """
     inject = dict(inject or {})
+    inj_by_vid: Dict[int, Dict[int, float]] = {}
+    for (p, vid), extra in inject.items():
+        if p < n_procs:
+            inj_by_vid.setdefault(vid, {})[p] = extra
     rng = np.random.default_rng(seed)
     sched = schedule(psg)
-    clocks = [0.0] * n_procs
-    perf: Dict[int, Dict[int, PerfVector]] = {p: {} for p in range(n_procs)}
+    clocks = np.zeros(n_procs)
+    store = PerfStore(n_procs, len(psg.vertices))
 
     for vid in sched:
         v = psg.vertices[vid]
@@ -103,46 +113,45 @@ def simulate(psg: PSG, n_procs: int,
                 for (s, d) in v.p2p_pairs:
                     if s >= n_procs or d >= n_procs:
                         continue
-                    wait = max(0.0, clocks[s] - clocks[d])
-                    perf[d][vid] = PerfVector(
-                        time=wait + tc, samples=1,
-                        counters={"wait_s": wait,
-                                  "comm_bytes": v.comm_bytes})
-                    sv = perf[s].setdefault(
-                        vid, PerfVector(time=tc, samples=1,
+                    cs, cd = float(clocks[s]), float(clocks[d])
+                    wait = max(0.0, cs - cd)
+                    store.set_entry(d, vid, wait + tc,
+                                    counters={"wait_s": wait,
+                                              "comm_bytes": v.comm_bytes})
+                    if (s, vid) not in store:
+                        store.set_entry(s, vid, tc,
                                         counters={"wait_s": 0.0,
-                                                  "comm_bytes": v.comm_bytes}))
-                    clocks[d] = max(clocks[d], clocks[s]) + tc
-                    clocks[s] += tc
+                                                  "comm_bytes": v.comm_bytes})
+                    clocks[d] = max(cd, cs) + tc
+                    clocks[s] = cs + tc
             else:
                 for g in groups:
-                    g = [p for p in g if p < n_procs]
-                    if not g:
+                    gi = np.asarray([p for p in g if p < n_procs], int)
+                    if gi.size == 0:
                         continue
-                    tc = comm_time(v, n_procs, g)
-                    sync = max(clocks[p] for p in g)
-                    for p in g:
-                        wait = sync - clocks[p]
-                        perf[p][vid] = PerfVector(
-                            time=wait + tc, samples=1,
-                            counters={"wait_s": wait,
-                                      "comm_bytes": v.comm_bytes})
-                        clocks[p] = sync + tc
+                    tc = comm_time(v, n_procs, gi.tolist())
+                    sync = float(clocks[gi].max())
+                    wait = sync - clocks[gi]
+                    store.set_column(vid, wait + tc, procs=gi,
+                                     counters={"wait_s": wait,
+                                               "comm_bytes": v.comm_bytes})
+                    clocks[gi] = sync + tc
             continue
-        for p in range(n_procs):
-            t = max(base_times(p, vid), 0.0)
-            t += inject.get((p, vid), 0.0)
-            if jitter:
-                t *= float(1.0 + jitter * rng.standard_normal())
-                t = max(t, 0.0)
-            perf[p][vid] = PerfVector(
-                time=t, samples=1,
-                counters={"flops": v.flops, "bytes": v.bytes})
-            clocks[p] += t
+        t = np.fromiter((base_times(p, vid) for p in range(n_procs)),
+                        float, count=n_procs)
+        np.maximum(t, 0.0, out=t)
+        for p, extra in inj_by_vid.get(vid, {}).items():
+            t[p] += extra
+        if jitter:
+            t *= 1.0 + jitter * rng.standard_normal(n_procs)
+            np.maximum(t, 0.0, out=t)
+        store.set_column(vid, t,
+                         counters={"flops": v.flops, "bytes": v.bytes})
+        clocks += t
 
-    ppg = build_ppg(psg, n_procs, perf)
-    ppg.meta["makespan"] = max(clocks) if clocks else 0.0
-    return SimResult(ppg=ppg, clocks=clocks, sched=sched)
+    ppg = build_ppg(psg, n_procs, store)
+    ppg.meta["makespan"] = float(clocks.max()) if n_procs else 0.0
+    return SimResult(ppg=ppg, clocks=clocks.tolist(), sched=sched)
 
 
 # ---------------------------------------------------------------------------

@@ -3,29 +3,37 @@ from __future__ import annotations
 
 from typing import Dict, Mapping, Optional, Sequence, Union
 
+import numpy as np
+
 from repro.core.commdep import add_comm_edges
-from repro.core.graph import PPG, PSG, PerfVector
+from repro.core.graph import PPG, PSG, PerfStore, PerfVector
 
 PerfByProc = Mapping[int, Mapping[int, PerfVector]]
+PerfInput = Union[Mapping[int, PerfVector], "PerfByProc", PerfStore]
 
 
-def build_ppg(psg: PSG, n_procs: int,
-              perf: Optional[Union[Mapping[int, PerfVector], PerfByProc]] = None,
+def build_ppg(psg: PSG, n_procs: int, perf: Optional[PerfInput] = None,
               *, replicate: bool = True, meta: Optional[dict] = None) -> PPG:
     """Assemble a PPG.
 
-    ``perf`` is either {vid: PerfVector} (replicated to all processes — the
-    single-controller measured channel) or {proc: {vid: PerfVector}} for
-    per-process data (simulator / per-shard timing).
+    ``perf`` is a ready :class:`PerfStore` (the simulator fast path), or
+    {vid: PerfVector} (replicated to all processes — the single-controller
+    measured channel), or {proc: {vid: PerfVector}} for per-process data
+    (per-shard timing).
     """
-    ppg = PPG(psg=psg, n_procs=n_procs, meta=dict(meta or {}))
-    if perf:
+    store: Optional[PerfStore] = None
+    if isinstance(perf, PerfStore):
+        store = perf
+    ppg = PPG(psg=psg, n_procs=n_procs, perf=store, meta=dict(meta or {}))
+    if perf and store is None:
         first = next(iter(perf.values()))
         if isinstance(first, PerfVector):        # {vid: vec}
             if replicate:
-                for p in range(n_procs):
-                    for vid, vec in perf.items():
-                        ppg.set_perf(p, vid, vec)
+                # one column write per vertex instead of P x V set_perf calls
+                for vid, vec in perf.items():
+                    ppg.perf.set_column(
+                        vid, vec.time, time_var=vec.time_var,
+                        samples=vec.samples, counters=vec.counters)
             else:
                 for vid, vec in perf.items():
                     ppg.set_perf(0, vid, vec)

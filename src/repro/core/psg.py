@@ -38,15 +38,20 @@ def _source_of(eqn) -> str:
     try:
         from jax._src import source_info_util
         si = eqn.source_info
-        tb = getattr(si, "traceback", si)
-        frame = source_info_util.user_frame(tb)
-        if frame is None:
-            frames = list(source_info_util.user_frames(tb))
-            frame = frames[0] if frames else None
-        if frame is not None:
-            return f"{frame.file_name}:{frame.start_line}"
-    except Exception:
-        pass
+    except Exception:                  # private API: absent on some versions
+        return ""
+    # newer jax expects the SourceInfo (reads .traceback itself); older
+    # versions took the raw Traceback — try both
+    for arg in (si, getattr(si, "traceback", si)):
+        try:
+            frame = source_info_util.user_frame(arg)
+            if frame is None:
+                frames = list(source_info_util.user_frames(arg))
+                frame = frames[0] if frames else None
+            if frame is not None:
+                return f"{frame.file_name}:{frame.start_line}"
+        except Exception:
+            continue
     return ""
 
 
@@ -172,5 +177,6 @@ def build_psg(fn=None, *args, jaxpr=None, max_depth: int = 64, **kwargs) -> PSG:
 
 
 def top_level_order(psg: PSG) -> List[int]:
-    """Program-order vids directly under the root."""
-    return [v.vid for v in psg.vertices if v.parent == psg.root]
+    """Program-order vids directly under the root (children index is
+    maintained in creation = program order)."""
+    return psg.children(psg.root)

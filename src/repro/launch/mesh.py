@@ -11,26 +11,44 @@ from __future__ import annotations
 from typing import Dict, Optional, Tuple
 
 import jax
-from jax.sharding import AxisType
+
+try:                              # jax >= 0.5: explicit axis types
+    from jax.sharding import AxisType
+except ImportError:               # older jax: Auto is the only behavior
+    AxisType = None
+
+
+def _mesh(shape, axes):
+    if AxisType is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _mesh(shape, axes)
 
 
 def make_host_mesh(model_axis: int = 1):
     """Mesh over whatever devices exist (CPU smoke / small hosts)."""
     n = jax.device_count()
     assert n % model_axis == 0, (n, model_axis)
-    return jax.make_mesh((n // model_axis, model_axis), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return _mesh((n // model_axis, model_axis), ("data", "model"))
 
 
 def mesh_chip_count(mesh) -> int:
     return mesh.devices.size
+
+
+def cost_analysis_dict(compiled) -> Dict[str, float]:
+    """compiled.cost_analysis() as a flat dict across jax versions
+    (older jax returns a list with one dict per device)."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
 
 
 # TPU v5e hardware constants for the roofline (per chip).

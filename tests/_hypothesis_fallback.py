@@ -1,0 +1,122 @@
+"""Minimal stand-in for `hypothesis` when it isn't installed.
+
+The real library is declared in pyproject.toml and is used when available
+(conftest.py only installs this shim on ImportError).  The shim covers the
+subset this test suite uses — ``given``/``settings`` decorators and the
+``floats`` / ``integers`` / ``sampled_from`` / ``booleans`` / ``composite``
+strategies — drawing examples from a seeded PRNG so runs are deterministic.
+No shrinking, no database, no stateful testing.
+"""
+from __future__ import annotations
+
+import functools
+import random
+import types
+from typing import Any, Callable, Sequence
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+class Strategy:
+    """A value generator: ``example(rng)`` draws one value."""
+
+    def __init__(self, draw_fn: Callable[[random.Random], Any]):
+        self._draw = draw_fn
+
+    def example(self, rng: random.Random) -> Any:
+        return self._draw(rng)
+
+
+def floats(min_value: float, max_value: float) -> Strategy:
+    # bias the first draws toward the endpoints, like hypothesis does
+    def draw(rng):
+        r = rng.random()
+        if r < 0.05:
+            return float(min_value)
+        if r < 0.10:
+            return float(max_value)
+        return rng.uniform(min_value, max_value)
+    return Strategy(draw)
+
+
+def integers(min_value: int, max_value: int) -> Strategy:
+    def draw(rng):
+        r = rng.random()
+        if r < 0.05:
+            return int(min_value)
+        if r < 0.10:
+            return int(max_value)
+        return rng.randint(min_value, max_value)
+    return Strategy(draw)
+
+
+def sampled_from(elements: Sequence[Any]) -> Strategy:
+    elements = list(elements)
+    return Strategy(lambda rng: elements[rng.randrange(len(elements))])
+
+
+def booleans() -> Strategy:
+    return Strategy(lambda rng: rng.random() < 0.5)
+
+
+def lists(element: Strategy, *, min_size: int = 0,
+          max_size: int = 10) -> Strategy:
+    def draw(rng):
+        n = rng.randint(min_size, max_size)
+        return [element.example(rng) for _ in range(n)]
+    return Strategy(draw)
+
+
+def composite(fn: Callable) -> Callable[..., Strategy]:
+    """``@composite`` — fn(draw, *args) becomes a strategy factory."""
+    @functools.wraps(fn)
+    def factory(*args, **kwargs) -> Strategy:
+        def draw_value(rng):
+            return fn(lambda strat: strat.example(rng), *args, **kwargs)
+        return Strategy(draw_value)
+    return factory
+
+
+def given(*arg_strategies: Strategy, **kw_strategies: Strategy):
+    """Run the test once per generated example (deterministic seed)."""
+    def decorate(test_fn):
+        @functools.wraps(test_fn)
+        def wrapper(*fixture_args, **fixture_kwargs):
+            n = getattr(wrapper, "_max_examples", _DEFAULT_MAX_EXAMPLES)
+            rng = random.Random(f"shim:{test_fn.__module__}."
+                                f"{test_fn.__qualname__}")
+            for i in range(n):
+                args = tuple(s.example(rng) for s in arg_strategies)
+                kwargs = {k: s.example(rng) for k, s in kw_strategies.items()}
+                try:
+                    test_fn(*fixture_args, *args,
+                            **{**fixture_kwargs, **kwargs})
+                except Exception as e:
+                    e.args = (f"[hypothesis-shim example {i}: args={args} "
+                              f"kwargs={kwargs}] {e.args[0] if e.args else ''}",
+                              *e.args[1:])
+                    raise
+        # pytest must not see the original signature (it would treat the
+        # strategy params as fixtures), so drop the wraps() breadcrumb
+        del wrapper.__wrapped__
+        wrapper._hypothesis_shim = True
+        return wrapper
+    return decorate
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None,
+             **_ignored):
+    """Applied above @given: records max_examples on the wrapped test."""
+    def decorate(fn):
+        fn._max_examples = max_examples
+        return fn
+    return decorate
+
+
+strategies = types.ModuleType("hypothesis.strategies")
+strategies.floats = floats
+strategies.integers = integers
+strategies.sampled_from = sampled_from
+strategies.booleans = booleans
+strategies.lists = lists
+strategies.composite = composite

@@ -7,6 +7,18 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+try:
+    import hypothesis  # noqa: F401  (the real library, when installed)
+except ImportError:
+    sys.path.insert(0, os.path.dirname(__file__))
+    import _hypothesis_fallback as _hf
+    _hyp = type(sys)("hypothesis")
+    _hyp.given = _hf.given
+    _hyp.settings = _hf.settings
+    _hyp.strategies = _hf.strategies
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _hf.strategies
+
 import jax
 import jax.numpy as jnp
 import numpy as np

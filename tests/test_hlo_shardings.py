@@ -81,13 +81,13 @@ def test_split_computations_finds_entry():
 # ---------------------------------------------------------------------------
 
 def _mesh22():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    # AxisType only exists in newer jax; Auto is the default behavior anyway
+    from repro.launch.mesh import _mesh
+    return _mesh((1, 1), ("data", "model"))
 
 
 def test_spec_for_divisibility_opt_out():
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = _mesh22()
     rules = {"vocab": "model", "embed": "data"}
     # divisible: sharded;  mesh axes are size 1 so everything divides —
     # use resolve_axis contract directly

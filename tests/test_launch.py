@@ -39,7 +39,8 @@ def test_cell_lowers_and_compiles(arch, kind, monkeypatch):
     mesh = make_host_mesh()
     cell = build_cell(arch, shape.name, mesh, cfg=cfg, donate=False)
     compiled = cell.lower().compile()
-    assert compiled.cost_analysis().get("flops", 0) > 0
+    from repro.launch.mesh import cost_analysis_dict
+    assert cost_analysis_dict(compiled).get("flops", 0) > 0
     cost = analyze_hlo(compiled.as_text())
     assert cost.dot_flops > 0
 
