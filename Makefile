@@ -1,7 +1,7 @@
 PYTHONPATH := src:.
 export PYTHONPATH
 
-.PHONY: check test smoke bench
+.PHONY: check test smoke bench docs-check
 
 test:
 	python -m pytest -x -q
@@ -9,9 +9,14 @@ test:
 smoke:
 	python -m benchmarks.run --smoke
 
+# execute every code block in docs/*.md and README.md (jax-free)
+docs-check:
+	python tools/check_docs.py
+
 # tier-1 tests + the graph-core smoke benchmark (its internal O(P)
-# comm-storage assertion makes perf regressions fail loudly)
-check: test smoke
+# comm-storage and sparse-counter assertions make perf regressions fail
+# loudly) + executable documentation
+check: test smoke docs-check
 
 bench:
 	python -m benchmarks.run

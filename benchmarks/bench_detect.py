@@ -37,6 +37,11 @@ def run() -> None:
             + (0.05 if (p == 4 and vid == target) else 0.0),
             jitter=0.02)
         top = series[n_procs]
+        # jax is imported here, so "auto" resolves to the jitted detect
+        # backend — warm its per-shape jit caches so the measurement is
+        # steady-state detection cost, not trace+compile
+        detect_non_scalable(series)
+        detect_abnormal(top)
         t0 = time.perf_counter()
         ns = detect_non_scalable(series)
         ab = detect_abnormal(top)

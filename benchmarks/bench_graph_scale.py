@@ -5,13 +5,19 @@ step PSG (comp chain + halo-exchange p2p ring + grouped and global
 collectives) is simulated with an injected straggler, then the full
 post-mortem pipeline runs at 512/2048/8192 processes.  Reported per scale:
 
-  * wall time for PPG build (simulate), detection, and backtracking;
+  * wall time for PPG build (simulate), detection (numpy AND — in the full
+    run, when jax is importable — the jitted backend, post-warmup), and
+    backtracking;
   * ``ppg.nbytes()`` and the comm-dependence share of it — collective
     dependence is stored as participant groups, so comm bytes grow O(P),
-    not O(P²) (asserted: a materialized 8192-clique would need >1 GB).
+    not O(P²) (asserted: a materialized 8192-clique would need >1 GB);
+  * counter storage: the column-sparse layout vs the dense (P, V)
+    equivalent (asserted smaller — counters only materialize at the
+    vertex subset that defines them).
 
-Pure numpy: imports only the lazy analysis layer of `repro.core`, so it
-runs without jax — fast and safe for `run.py --smoke` / `make check`.
+The smoke mode (`run.py --smoke` / `make check`) imports only the lazy
+analysis layer of `repro.core` and never touches jax — it is the jax-free
+canary.  The full run additionally times `backend="jax"` detection.
 """
 from __future__ import annotations
 
@@ -74,6 +80,13 @@ def build_step_psg(n_comp: int = 24, n_procs_hint: int = 8) -> PSG:
 
 def run(smoke: bool = False) -> None:
     scales = SMOKE_SCALES if smoke else FULL_SCALES
+    detect_backend = "numpy"
+    if not smoke:
+        try:
+            import jax                                        # noqa: F401
+            detect_backend = "jax"
+        except ImportError:
+            pass
     for n_procs in scales:
         psg = build_step_psg(n_procs_hint=n_procs)
         target = next(v.vid for v in psg.vertices if v.kind == COMP)
@@ -86,10 +99,28 @@ def run(smoke: bool = False) -> None:
         build_s = time.perf_counter() - t0
         top = series[n_procs]
 
+        if detect_backend == "jax":
+            # warm up the jit caches so detect_s reports steady-state
+            # latency (the online-diagnostics number), not trace+compile
+            detect_non_scalable(series, backend="jax")
+            detect_abnormal(top, backend="jax")
         t0 = time.perf_counter()
-        ns = detect_non_scalable(series)
-        ab = detect_abnormal(top)
+        ns = detect_non_scalable(series, backend=detect_backend)
+        ab = detect_abnormal(top, backend=detect_backend)
         detect_s = time.perf_counter() - t0
+
+        detect_np_s = detect_s
+        if detect_backend == "jax":
+            # cross-backend check + numpy comparison timing (skipped when
+            # the timed pass was numpy already)
+            t0 = time.perf_counter()
+            ns_np = detect_non_scalable(series, backend="numpy")
+            ab_np = detect_abnormal(top, backend="numpy")
+            detect_np_s = time.perf_counter() - t0
+            assert [d.vid for d in ns] == [d.vid for d in ns_np] \
+                and [(a.proc, a.vid) for a in ab] == [(a.proc, a.vid)
+                                                     for a in ab_np], \
+                "jitted and numpy detection disagree"
 
         t0 = time.perf_counter()
         paths = backtrack(top, ns, ab)
@@ -104,12 +135,21 @@ def run(smoke: bool = False) -> None:
         # O(P) guarantee: implicit groups, never the materialized clique
         assert comm_nbytes < 64 * len(psg.vertices) * n_procs, \
             f"comm storage not O(P): {comm_nbytes} bytes at {n_procs} procs"
+        # column-sparse counters must beat the dense (P, V) layout
+        counter_nbytes = top.perf.counter_nbytes()
+        counter_dense = top.perf.counter_dense_nbytes()
+        assert counter_nbytes < counter_dense, \
+            f"counter storage not sparse: {counter_nbytes} >= {counter_dense}"
         found = any(node[1] == target for node, _, _ in rcs)
         emit(f"graph_scale/{n_procs}procs",
              (build_s + detect_s + backtrack_s) * 1e6,
-             f"build_s={build_s:.3f};detect_s={detect_s:.3f};"
-             f"backtrack_s={backtrack_s:.3f};ppg_bytes={nbytes};"
-             f"comm_bytes={comm_nbytes};clique_equiv_bytes={clique_nbytes};"
+             f"build_s={build_s:.3f};detect_s={detect_s:.4f};"
+             f"detect_backend={detect_backend};detect_numpy_s="
+             f"{detect_np_s:.4f};backtrack_s={backtrack_s:.3f};"
+             f"ppg_bytes={nbytes};comm_bytes={comm_nbytes};"
+             f"clique_equiv_bytes={clique_nbytes};"
+             f"counter_bytes={counter_nbytes};"
+             f"counter_dense_equiv_bytes={counter_dense};"
              f"paths={len(paths)};root_cause_found={found}")
 
 

@@ -19,11 +19,13 @@ _EXPORTS = {
     "annotate_from_hlo": "commdep",
     "contract": "contraction",
     "Abnormal": "detect", "NonScalable": "detect",
+    "MERGE_STRATEGIES": "detect", "JIT_STRATEGIES": "detect",
     "detect_abnormal": "detect", "detect_non_scalable": "detect",
     "fit_loglog": "detect",
     "BRANCH": "graph", "CALL": "graph", "COMM": "graph", "COMP": "graph",
     "LOOP": "graph", "ROOT": "graph",
-    "CommIndex": "graph", "EdgeSet": "graph", "PPG": "graph", "PSG": "graph",
+    "CommIndex": "graph", "CounterColumns": "graph", "EdgeSet": "graph",
+    "PPG": "graph", "PSG": "graph",
     "PerfStore": "graph", "PerfVector": "graph", "Vertex": "graph",
     "collective_bytes_total": "hlo", "parse_collectives": "hlo",
     "simulate": "inject", "simulate_series": "inject",
@@ -56,11 +58,13 @@ if TYPE_CHECKING:                     # static analyzers see eager imports
                                       root_causes)
     from repro.core.commdep import CommLog, add_comm_edges, annotate_from_hlo
     from repro.core.contraction import contract
-    from repro.core.detect import (Abnormal, NonScalable, detect_abnormal,
-                                   detect_non_scalable, fit_loglog)
+    from repro.core.detect import (Abnormal, JIT_STRATEGIES,
+                                   MERGE_STRATEGIES, NonScalable,
+                                   detect_abnormal, detect_non_scalable,
+                                   fit_loglog)
     from repro.core.graph import (BRANCH, CALL, COMM, COMP, LOOP, ROOT,
-                                  CommIndex, EdgeSet, PPG, PSG, PerfStore,
-                                  PerfVector, Vertex)
+                                  CommIndex, CounterColumns, EdgeSet, PPG,
+                                  PSG, PerfStore, PerfVector, Vertex)
     from repro.core.hlo import collective_bytes_total, parse_collectives
     from repro.core.inject import simulate, simulate_series
     from repro.core.ppg import build_ppg

@@ -184,7 +184,15 @@ def _anomaly_score(ppg: PPG, node: Node,
 
 
 def _busy_matrix(ppg: PPG) -> np.ndarray:
-    return ppg.times_matrix() - ppg.counter_matrix(WAIT_COUNTER)
+    """time minus wait, (n_procs, V).  ``wait_s`` is column-sparse (it only
+    exists at Comm vertices), so subtract its compressed columns instead of
+    materializing a dense (n_procs, V) counter matrix."""
+    busy = ppg.times_matrix().copy()
+    vids, values, mask = ppg.perf.counter_columns(WAIT_COUNTER)
+    keep = vids < busy.shape[1]
+    if keep.any():
+        busy[:, vids[keep]] -= np.where(mask[:, keep], values[:, keep], 0.0)
+    return busy
 
 
 def root_causes(paths: Sequence[Path], psg: PSG, top_k: int = 5,

@@ -10,20 +10,75 @@
 
 Complexity: both detectors are vectorized over the PPG's dense (n_procs,
 n_vertices) time matrices — cross-process merges, the log-log slope fit,
-and abnormality thresholding are batched numpy reductions, O(P*V) work
-with no per-(proc, vertex) Python loops.  Only flagged entries (<= top_k
-in practice) materialize Python objects.
+and abnormality thresholding are batched reductions, O(P*V) work with no
+per-(proc, vertex) Python loops.  Only flagged entries (<= top_k in
+practice) materialize Python objects.
+
+Backends: the detection math runs either as numpy on the host or as fused
+``jax.jit`` kernels (:mod:`repro.core.detect_jax` — all jittable merge
+strategies batched into one stacked (S, P, V) computation).  ``backend=``
+on each detector selects it explicitly ("numpy" / "jax"); the default
+"auto" uses the jitted path only when jax is ALREADY imported in the
+process, so the pure-numpy analysis layer never pays the jax import (the
+jax-free ``--smoke`` canary stays jax-free).  The ``SCALANA_DETECT_BACKEND``
+environment variable overrides the default.
+
+Merge strategies (``MERGE_STRATEGIES``): "mean", "median", "max", "p0",
+"cluster", and variance-weighted "var" (readings weighted 1/time_var —
+noisy processes count less).  "median"/"cluster" need data-dependent
+per-column cuts and always run on the numpy path.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
+import os
+import sys
 import warnings
 from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.graph import COMM, COMP, LOOP, PPG
+
+MERGE_STRATEGIES = ("mean", "median", "max", "p0", "cluster", "var")
+
+# strategies the jitted backend computes; the tuple order defines the row
+# layout of detect_jax's stacked merge output (detect_jax imports this)
+JIT_STRATEGIES = ("mean", "max", "p0", "var")
+
+# inverse-variance weights are 1/(var + VAR_EPS): a zero-variance reading
+# gets (effectively infinite) weight, all-zero variance degrades to "mean"
+VAR_EPS = 1e-18
+
+
+def _resolve_backend(backend: Optional[str]):
+    """Return the detect_jax module for the jitted path, or None for numpy.
+
+    "auto" (the default) only opts into jax when something else in the
+    process already imported it; "jax" imports (and raises if unavailable);
+    "numpy" never touches jax.
+    """
+    if backend is None:
+        backend = os.environ.get("SCALANA_DETECT_BACKEND", "auto")
+    if backend == "numpy":
+        return None
+    if backend not in ("auto", "jax"):
+        raise ValueError(f"unknown detect backend: {backend!r}")
+    if backend == "auto" and "jax" not in sys.modules:
+        return None
+    try:
+        from repro.core import detect_jax
+    except ImportError:        # only jax-absence falls back; bugs surface
+        if backend == "jax":
+            raise
+        return None
+    if not detect_jax.HAS_JAX:
+        if backend == "jax":
+            raise ImportError("backend='jax' requested but jax is not "
+                              "importable")
+        return None
+    return detect_jax
 
 
 @dataclasses.dataclass
@@ -50,7 +105,8 @@ class Abnormal:
     source: str = ""
 
 
-def _merge(times: Sequence[float], strategy: str) -> float:
+def _merge(times: Sequence[float], strategy: str,
+           variances: Optional[Sequence[float]] = None) -> float:
     """Scalar reference merge (see ``_merge_matrix`` for the batched path)."""
     arr = np.asarray([t for t in times if t > 0.0])
     if arr.size == 0:
@@ -65,6 +121,14 @@ def _merge(times: Sequence[float], strategy: str) -> float:
         # proc-0's reading when alive; a dead proc-0 (t == 0) falls back to
         # the mean of live readings instead of silently dropping the vertex
         return float(times[0]) if times[0] > 0.0 else float(arr.mean())
+    if strategy == "var":
+        # inverse-variance weighting: noisy processes count less; with no
+        # variance data every weight is equal and this degrades to "mean"
+        var = np.zeros(len(times)) if variances is None \
+            else np.asarray(variances, float)
+        live = np.asarray(times) > 0.0
+        w = 1.0 / (var[live] + VAR_EPS)
+        return float((w * np.asarray(times)[live]).sum() / w.sum())
     if strategy == "cluster":
         # 2-means along sorted values; report the larger cluster's mean
         s = np.sort(arr)
@@ -78,8 +142,12 @@ def _merge(times: Sequence[float], strategy: str) -> float:
     raise ValueError(strategy)
 
 
-def _merge_matrix(t: np.ndarray, strategy: str) -> np.ndarray:
-    """Columnwise ``_merge`` over a (n_procs, V) time matrix -> (V,)."""
+def _merge_matrix(t: np.ndarray, strategy: str,
+                  var: Optional[np.ndarray] = None) -> np.ndarray:
+    """Columnwise ``_merge`` over a (n_procs, V) time matrix -> (V,).
+
+    ``var`` is the matching (n_procs, V) time-variance matrix, used only by
+    the variance-weighted "var" strategy."""
     n_procs, V = t.shape
     pos = t > 0.0
     cnt = pos.sum(axis=0)
@@ -99,6 +167,12 @@ def _merge_matrix(t: np.ndarray, strategy: str) -> np.ndarray:
         return np.where(any_pos, med, 0.0)
     if strategy == "max":
         return np.where(any_pos, t.max(axis=0, initial=0.0), 0.0)
+    if strategy == "var":
+        var = np.zeros_like(t) if var is None else var
+        w = np.where(pos, 1.0 / (var + VAR_EPS), 0.0)
+        wsum = w.sum(axis=0)
+        return np.divide((w * t).sum(axis=0), wsum, out=np.zeros(V),
+                         where=wsum > 0)
     if strategy == "cluster":
         out = np.zeros(V)
         for v in np.nonzero(any_pos)[0]:
@@ -152,9 +226,14 @@ def detect_non_scalable(series: Mapping[int, PPG], *,
                         slope_margin: float = 0.35,
                         min_share: float = 0.02,
                         top_k: int = 10,
-                        strategy: str = "mean") -> List[NonScalable]:
+                        strategy: str = "mean",
+                        backend: Optional[str] = None) -> List[NonScalable]:
     """series: {n_procs: PPG}. Flags vertices whose scaling slope deviates
-    from ideal by > slope_margin and whose time share is significant."""
+    from ideal by > slope_margin and whose time share is significant.
+
+    ``backend``: "numpy" (host), "jax" (fused jitted kernel), or None/"auto"
+    (jax iff already imported).  Strategies outside ``JIT_STRATEGIES`` run
+    on numpy regardless."""
     scales = sorted(series)
     if not scales:
         return []
@@ -168,21 +247,40 @@ def detect_non_scalable(series: Mapping[int, PPG], *,
     total_max = total_max or 1e-12
 
     S = len(scales)
-    M = np.zeros((S, V))                     # merged time per (scale, vertex)
     present = np.zeros((S, V), bool)         # vertex exists at that scale
-    for si, p in enumerate(scales):
-        ppg = series[p]
-        vp = min(len(ppg.psg.vertices), V)
-        if vp:
-            M[si, :vp] = _merge_matrix(ppg.times_matrix()[:, :vp], strategy)
-            present[si, :vp] = True
+    jx = _resolve_backend(backend) if strategy in JIT_STRATEGIES else None
+    if jx is not None:
+        # stacked (S, Pmax, V) layout: scales with fewer processes are
+        # padded with dead (0.0) readings, which every merge ignores
+        p_max = max(series[p].n_procs for p in scales)
+        T = np.zeros((S, p_max, V))
+        VAR = np.zeros((S, p_max, V))
+        for si, p in enumerate(scales):
+            ppg = series[p]
+            vp = min(len(ppg.psg.vertices), V)
+            if vp:
+                T[si, :ppg.n_procs, :vp] = ppg.times_matrix()[:, :vp]
+                VAR[si, :ppg.n_procs, :vp] = ppg.var_matrix()[:, :vp]
+                present[si, :vp] = True
+        M, slope, share, flagged = jx.non_scalable_arrays(
+            scales, T, VAR, present, total_max, ideal_slope, slope_margin,
+            min_share, strategy)
+    else:
+        M = np.zeros((S, V))                 # merged time per (scale, vertex)
+        for si, p in enumerate(scales):
+            ppg = series[p]
+            vp = min(len(ppg.psg.vertices), V)
+            if vp:
+                var = ppg.var_matrix()[:, :vp] if strategy == "var" else None
+                M[si, :vp] = _merge_matrix(ppg.times_matrix()[:, :vp],
+                                           strategy, var=var)
+                present[si, :vp] = True
+        slope = _fit_slopes(scales, M, (M > 0.0) & present)
+        share = M[-1] / total_max
+        flagged = (M.sum(axis=0) > 0.0) \
+            & (slope - ideal_slope > slope_margin) & (share >= min_share)
 
-    slope = _fit_slopes(scales, M, (M > 0.0) & present)
-    share = M[-1] / total_max
     deviation = slope - ideal_slope
-    flagged = (M.sum(axis=0) > 0.0) & (deviation > slope_margin) \
-        & (share >= min_share)
-
     out: List[NonScalable] = []
     for vid in np.nonzero(flagged)[0]:
         v = psg.vertices[vid]
@@ -198,7 +296,11 @@ def detect_non_scalable(series: Mapping[int, PPG], *,
 
 def detect_abnormal(ppg: PPG, *, abnorm_thd: float = 1.3,
                     min_share: float = 0.01,
-                    top_k: int = 20) -> List[Abnormal]:
+                    top_k: int = 20,
+                    backend: Optional[str] = None) -> List[Abnormal]:
+    """Per-process outliers at one scale (AbnormThd x cross-process median).
+
+    ``backend`` as in :func:`detect_non_scalable`."""
     psg = ppg.psg
     if not len(psg.vertices) or not ppg.n_procs:
         return []
@@ -207,22 +309,33 @@ def detect_abnormal(ppg: PPG, *, abnorm_thd: float = 1.3,
     step_time = float(t[:, top].sum(axis=1).max()) if top else 0.0
     step_time = step_time or 1e-12
 
-    typical = np.median(t, axis=0)                     # (V,)
-    active = t.max(axis=0) > 0.0
-    over = (typical > 0.0) & (t > abnorm_thd * typical) \
-        & ((t - typical) / step_time >= min_share)
-    dead_typical = (typical == 0.0) & (t / step_time >= min_share)
-    flags = (over | dead_typical) & active
+    jx = _resolve_backend(backend)
+    if jx is not None:
+        flags, typical = jx.abnormal_arrays(t, abnorm_thd, min_share,
+                                            step_time)
+    else:
+        typical = np.median(t, axis=0)                 # (V,)
+        active = t.max(axis=0) > 0.0
+        over = (typical > 0.0) & (t > abnorm_thd * typical) \
+            & ((t - typical) / step_time >= min_share)
+        dead_typical = (typical == 0.0) & (t / step_time >= min_share)
+        flags = (over | dead_typical) & active
 
     out: List[Abnormal] = []
-    # (vid, proc) iteration order mirrors the scalar reference loop so the
-    # stable sort below ranks ties identically
-    for vid, proc in np.argwhere(flags.T):
-        tv, ty = float(t[proc, vid]), float(typical[vid])
-        out.append(Abnormal(
-            vid=int(vid), proc=int(proc), time=tv, typical=ty,
-            ratio=tv / ty if ty > 0 else float("inf"),
-            kind=psg.vertices[vid].kind, name=psg.vertices[vid].name,
-            source=psg.vertices[vid].source))
-    out.sort(key=lambda d: -(d.time - d.typical))
-    return out[:top_k]
+    # (vid, proc) enumeration order mirrors the scalar reference loop and
+    # the stable sort ranks ties identically — but only the top_k survivors
+    # materialize Python objects (a straggler can flag thousands of
+    # (proc, vertex) pairs; building objects for all of them dominated
+    # detection cost at 8k procs)
+    idx = np.argwhere(flags.T)
+    if idx.size:
+        tv = t[idx[:, 1], idx[:, 0]]
+        ty = typical[idx[:, 0]]
+        for j in np.argsort(-(tv - ty), kind="stable")[:top_k]:
+            vid, proc = int(idx[j, 0]), int(idx[j, 1])
+            v = psg.vertices[vid]
+            out.append(Abnormal(
+                vid=vid, proc=proc, time=float(tv[j]), typical=float(ty[j]),
+                ratio=float(tv[j] / ty[j]) if ty[j] > 0 else float("inf"),
+                kind=v.kind, name=v.name, source=v.source))
+    return out

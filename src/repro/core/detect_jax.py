@@ -1,0 +1,157 @@
+"""Jitted detection kernels — the on-accelerator half of ``detect``.
+
+The detection math (cross-process merges, log-log slope fits, abnormality
+thresholding) is pure array arithmetic over :class:`PerfStore` matrices, so
+it can run under ``jax.jit`` next to the training job instead of on the
+host.  Three kernels cover the pipeline:
+
+* ``_merge_all_kernel`` — ALL jittable merge strategies ("mean" / "max" /
+  "p0" / variance-weighted "var") batched into one stacked (S, P, V)
+  computation: one fused executable produces the (4, S, V) merged-time
+  stack, so switching strategies costs an index, not a recompile.
+* ``_non_scalable_kernel`` — the merge stack + batched least-squares
+  log-log slopes + share/deviation flagging, fused under one ``jax.jit``.
+* ``_abnormal_kernel`` — AbnormThd thresholding against the cross-process
+  median (the median itself — an order statistic — is computed on the
+  host, where numpy's introselect beats XLA's CPU sort).
+
+All kernels run in float64 (``jax.experimental.enable_x64`` — thread-local,
+so the rest of the process keeps jax's float32 default) and match the
+numpy reference in ``repro.core.detect`` to reduction-order rounding
+(~1e-15 relative).  "median" and "cluster" merges are per-column sorts with
+data-dependent cuts; they stay on the numpy path.
+
+This module imports jax at module level and is therefore ONLY imported by
+``detect``'s backend resolution — never from the lazy ``repro.core``
+namespace — so the analysis layer stays importable without jax.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.detect import JIT_STRATEGIES, VAR_EPS
+
+try:
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import enable_x64
+    HAS_JAX = True
+except ImportError:                                # pragma: no cover
+    HAS_JAX = False
+
+
+if HAS_JAX:
+
+    def _merge_all(t: "jax.Array", var: "jax.Array") -> "jax.Array":
+        """(S, P, V) times + variances -> (4, S, V) merged, rows ordered as
+        JIT_STRATEGIES.  Non-positive readings are dead (excluded)."""
+        pos = t > 0.0
+        cnt = pos.sum(axis=1)                              # (S, V)
+        any_pos = cnt > 0
+        total = jnp.where(pos, t, 0.0).sum(axis=1)
+        mean = jnp.where(any_pos, total / jnp.maximum(cnt, 1), 0.0)
+        mx = jnp.where(any_pos, t.max(axis=1), 0.0)
+        p0 = t[:, 0, :]
+        p0 = jnp.where(p0 > 0.0, p0, mean)
+        w = jnp.where(pos, 1.0 / (var + VAR_EPS), 0.0)
+        wsum = w.sum(axis=1)
+        varm = jnp.where(wsum > 0,
+                         (w * t).sum(axis=1) / jnp.where(wsum > 0, wsum, 1.0),
+                         0.0)
+        return jnp.stack([mean, mx, p0, varm])             # (4, S, V)
+
+    @jax.jit
+    def _merge_all_kernel(t, var):
+        return _merge_all(t, var)
+
+    @jax.jit
+    def _non_scalable_kernel(t, var, logp, present, total_max,
+                             ideal_slope, slope_margin, min_share):
+        """Fused detect math: merge stack + slope fit + flagging.
+
+        t, var: (S, P, V) stacked per-scale matrices (P padded to the max
+        scale; padding rows are dead readings).  logp: (S,) log process
+        counts.  present: (S, V) vertex-exists-at-scale mask.  Returns
+        (M_all (4, S, V), slope (4, V), share (4, V), flagged (4, V))."""
+        M = _merge_all(t, var)                             # (4, S, V)
+        valid = (M > 0.0) & present[None]
+        x = logp[None, :, None]                            # (1, S, 1)
+        Y = jnp.where(valid, jnp.log(jnp.where(valid, M, 1.0)), 0.0)
+        n = valid.sum(axis=1)                              # (4, V)
+        Sx = (x * valid).sum(axis=1)
+        Sy = Y.sum(axis=1)
+        Sxx = (x * x * valid).sum(axis=1)
+        Sxy = (x * Y).sum(axis=1)
+        denom = n * Sxx - Sx ** 2
+        num = n * Sxy - Sx * Sy
+        slope = jnp.where((denom != 0) & (n >= 2),
+                          num / jnp.where(denom != 0, denom, 1.0), 0.0)
+        share = M[:, -1, :] / total_max
+        flagged = ((M.sum(axis=1) > 0.0)
+                   & (slope - ideal_slope > slope_margin)
+                   & (share >= min_share))
+        return M, slope, share, flagged
+
+    @jax.jit
+    def _abnormal_kernel(t, typical, abnorm_thd, min_share, step_time):
+        """(P, V) times + (V,) typical -> (P, V) flag mask.
+
+        ``typical`` (the cross-process median) is computed on the host:
+        it is an order statistic, and XLA's column sort is the one piece
+        of the detection math that is slower under jit on CPU than the
+        numpy introselect."""
+        active = t.max(axis=0) > 0.0
+        over = ((typical > 0.0) & (t > abnorm_thd * typical)
+                & ((t - typical) / step_time >= min_share))
+        dead_typical = (typical == 0.0) & (t / step_time >= min_share)
+        return (over | dead_typical) & active
+
+
+def merge_matrix(t: np.ndarray, strategy: str,
+                 var: Optional[np.ndarray] = None) -> np.ndarray:
+    """Jitted columnwise merge over one (n_procs, V) matrix -> (V,).
+
+    All strategies are computed in one stacked kernel call; ``strategy``
+    only selects the output row.  Reference-parity entry point for tests
+    and small hosts; detection uses the fused kernels directly."""
+    si = JIT_STRATEGIES.index(strategy)
+    with enable_x64():
+        t64 = jnp.asarray(np.asarray(t, np.float64)[None])
+        v64 = jnp.asarray(np.zeros_like(t, np.float64)[None] if var is None
+                          else np.asarray(var, np.float64)[None])
+        out = _merge_all_kernel(t64, v64)
+    return np.asarray(out)[si, 0]
+
+
+def non_scalable_arrays(scales: Sequence[int], t: np.ndarray, var: np.ndarray,
+                        present: np.ndarray, total_max: float,
+                        ideal_slope: float, slope_margin: float,
+                        min_share: float, strategy: str
+                        ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                                   np.ndarray]:
+    """Run the fused non-scalable kernel; returns the ``strategy`` row of
+    (M (S, V), slope (V,), share (V,), flagged (V,))."""
+    si = JIT_STRATEGIES.index(strategy)
+    logp = np.log(np.asarray(scales, np.float64))
+    with enable_x64():
+        M, slope, share, flagged = _non_scalable_kernel(
+            jnp.asarray(np.asarray(t, np.float64)),
+            jnp.asarray(np.asarray(var, np.float64)),
+            jnp.asarray(logp), jnp.asarray(present),
+            float(total_max), float(ideal_slope), float(slope_margin),
+            float(min_share))
+    return (np.asarray(M)[si], np.asarray(slope)[si],
+            np.asarray(share)[si], np.asarray(flagged)[si])
+
+
+def abnormal_arrays(t: np.ndarray, abnorm_thd: float, min_share: float,
+                    step_time: float) -> Tuple[np.ndarray, np.ndarray]:
+    """Run the abnormal kernel; returns ((P, V) flags, (V,) typical)."""
+    typical = np.median(np.asarray(t, np.float64), axis=0)
+    with enable_x64():
+        flags = _abnormal_kernel(
+            jnp.asarray(np.asarray(t, np.float64)), jnp.asarray(typical),
+            float(abnorm_thd), float(min_share), float(step_time))
+    return np.asarray(flags), typical

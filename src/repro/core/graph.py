@@ -11,8 +11,10 @@ Complexity guarantees (the indexed graph core):
   adjacency and kind indexes are maintained incrementally by ``new_vertex``,
   ``add_edge`` and ``set_parent``, never by rescanning all V vertices or E
   edges.
-* ``PPG.perf`` is a dense array store (:class:`PerfStore`): time / variance /
-  sample / counter matrices of shape (n_procs, n_vertices).
+* ``PPG.perf`` is an array store (:class:`PerfStore`): time / variance /
+  sample matrices of shape (n_procs, n_vertices), counters column-sparse
+  (:class:`CounterColumns` — a counter only materializes at the vertex
+  subset that defines it, e.g. ``wait_s`` at Comm vertices).
   ``times_across_procs`` and the detectors' cross-process reductions are
   numpy slices, O(P) memory with no per-entry Python objects.
 * Collective communication dependence is implicit: ``add_collective_edges``
@@ -246,18 +248,79 @@ class PerfVector:
     counters: Dict[str, float] = field(default_factory=dict)  # PAPI analogue
 
 
-class PerfStore:
-    """Dense per-(process, vertex) performance store.
+class CounterColumns:
+    """Column-sparse per-counter storage (a CSC layout over vertex ids).
 
-    Time / variance / sample-count / counter data live in (n_procs,
-    n_vertices) numpy matrices, so cross-process reductions are array
-    slices.  The old ``{(proc, vid): PerfVector}`` mapping API is preserved
-    on top: ``store[(p, vid)]`` materializes a PerfVector view on demand.
-    Columns grow automatically when vertices are added after construction.
+    A counter like ``wait_s`` only exists at the vertex subset that defines
+    it (Comm vertices), so its matrix is stored as a dense (n_procs, k)
+    block over only the k columns ever written, plus a vid -> slot map.
+    Dense (n_procs, V) views are materialized on demand; ``columns()``
+    exposes the compressed block directly for hot paths (backtrack's busy
+    matrix subtracts ``wait_s`` at k Comm columns, not V).
+    """
+
+    __slots__ = ("n_procs", "slot_of", "vids", "values", "mask")
+
+    def __init__(self, n_procs: int):
+        self.n_procs = int(n_procs)
+        self.slot_of: Dict[int, int] = {}
+        self.vids: List[int] = []
+        self.values = np.zeros((self.n_procs, 4))
+        self.mask = np.zeros((self.n_procs, 4), bool)
+
+    def slot(self, vid: int) -> int:
+        """Slot of ``vid``, allocating (and growing by doubling) if new."""
+        s = self.slot_of.get(vid)
+        if s is not None:
+            return s
+        s = len(self.vids)
+        if s >= self.values.shape[1]:
+            cap = 2 * self.values.shape[1]
+            values = np.zeros((self.n_procs, cap))
+            values[:, :s] = self.values[:, :s]
+            mask = np.zeros((self.n_procs, cap), bool)
+            mask[:, :s] = self.mask[:, :s]
+            self.values, self.mask = values, mask
+        self.slot_of[vid] = s
+        self.vids.append(vid)
+        return s
+
+    def columns(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(vids, values, mask): the compressed (n_procs, k) block."""
+        k = len(self.vids)
+        return (np.asarray(self.vids, np.int64),
+                self.values[:, :k], self.mask[:, :k])
+
+    def dense(self, n_vertices: int) -> np.ndarray:
+        """Materialize the (n_procs, n_vertices) view; unset entries 0.0."""
+        out = np.zeros((self.n_procs, n_vertices))
+        vids, values, mask = self.columns()
+        keep = vids < n_vertices
+        if keep.any():
+            out[:, vids[keep]] = np.where(mask[:, keep], values[:, keep], 0.0)
+        return out
+
+    def nbytes(self) -> int:
+        k = len(self.vids)
+        return self.n_procs * k * 9 + 8 * k      # f64 value + bool mask + vid
+
+
+class PerfStore:
+    """Per-(process, vertex) performance store.
+
+    Time / variance / sample-count data live in dense (n_procs, n_vertices)
+    numpy matrices, so cross-process reductions are array slices.  Counters
+    (the PAPI analogue: ``wait_s``, ``flops``, ...) are column-sparse
+    :class:`CounterColumns` — each materializes only at the vertex subset
+    that defines it, cutting counter memory ~V/|Comm| for comm-only
+    counters at scale.  The old ``{(proc, vid): PerfVector}`` mapping API
+    is preserved on top: ``store[(p, vid)]`` materializes a PerfVector view
+    on demand.  Columns grow automatically when vertices are added after
+    construction.
     """
 
     __slots__ = ("n_procs", "_cols", "time", "time_var", "samples",
-                 "_mask", "_counters", "_cmask", "_count")
+                 "_mask", "_counters", "_count")
 
     def __init__(self, n_procs: int, n_vertices: int = 0):
         self.n_procs = int(n_procs)
@@ -267,8 +330,7 @@ class PerfStore:
         self.time_var = np.zeros(shape)
         self.samples = np.zeros(shape, np.int64)
         self._mask = np.zeros(shape, bool)
-        self._counters: Dict[str, np.ndarray] = {}
-        self._cmask: Dict[str, np.ndarray] = {}
+        self._counters: Dict[str, CounterColumns] = {}
         self._count = 0
 
     # -- storage management --------------------------------------------
@@ -285,17 +347,13 @@ class PerfStore:
         self.time_var = self._grow(self.time_var, cols)
         self.samples = self._grow(self.samples, cols)
         self._mask = self._grow(self._mask, cols)
-        for name in self._counters:
-            self._counters[name] = self._grow(self._counters[name], cols)
-            self._cmask[name] = self._grow(self._cmask[name], cols)
         self._cols = cols
 
-    def _counter_arrays(self, name: str) -> Tuple[np.ndarray, np.ndarray]:
-        if name not in self._counters:
-            shape = (self.n_procs, self._cols)
-            self._counters[name] = np.zeros(shape)
-            self._cmask[name] = np.zeros(shape, bool)
-        return self._counters[name], self._cmask[name]
+    def _counter_cols(self, name: str) -> CounterColumns:
+        cc = self._counters.get(name)
+        if cc is None:
+            cc = self._counters[name] = CounterColumns(self.n_procs)
+        return cc
 
     # -- matrix views (the fast path) ----------------------------------
     def time_matrix(self, n_vertices: Optional[int] = None) -> np.ndarray:
@@ -310,16 +368,29 @@ class PerfStore:
 
     def counter_matrix(self, name: str,
                        n_vertices: Optional[int] = None) -> np.ndarray:
-        """(n_procs, n_vertices) counter values; unset entries are 0.0."""
-        arr = self._counters.get(name)
+        """(n_procs, n_vertices) counter values; unset entries are 0.0.
+
+        A dense view materialized from the sparse columns — prefer
+        :meth:`counter_columns` in hot paths that touch few vertices."""
         n = self._cols if n_vertices is None else n_vertices
-        if arr is None:
+        cc = self._counters.get(name)
+        if cc is None:
             return np.zeros((self.n_procs, n))
-        if n <= self._cols:
-            return arr[:, :n]
-        out = np.zeros((self.n_procs, n))
-        out[:, :self._cols] = arr
-        return out
+        return cc.dense(n)
+
+    def counter_columns(self, name: str
+                        ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Compressed (vids, (n_procs, k) values, (n_procs, k) mask) view of
+        one counter — only the k columns the counter was ever written at."""
+        cc = self._counters.get(name)
+        if cc is None:
+            return (np.zeros(0, np.int64),
+                    np.zeros((self.n_procs, 0)),
+                    np.zeros((self.n_procs, 0), bool))
+        return cc.columns()
+
+    def counter_names(self) -> List[str]:
+        return list(self._counters)
 
     # -- bulk columns (simulator / replicated-profile fast path) -------
     def set_column(self, vid: int, time, *, time_var=0.0, samples=1,
@@ -335,17 +406,21 @@ class PerfStore:
         self.time_var[idx, vid] = time_var
         self.samples[idx, vid] = samples
         for name, val in (counters or {}).items():
-            arr, cmask = self._counter_arrays(name)
-            arr[idx, vid] = val
-            cmask[idx, vid] = True
+            cc = self._counter_cols(name)
+            s = cc.slot(vid)
+            cc.values[idx, s] = val
+            cc.mask[idx, s] = True
 
     def counter_at(self, name: str, p: int, vid: int,
                    default: float = 0.0) -> float:
         """O(1) counter read; ``default`` when the entry/counter is unset."""
-        cmask = self._cmask.get(name)
-        if cmask is None or vid >= self._cols or not cmask[p, vid]:
+        cc = self._counters.get(name)
+        if cc is None:
             return default
-        return float(self._counters[name][p, vid])
+        s = cc.slot_of.get(vid)
+        if s is None or not cc.mask[p, s]:
+            return default
+        return float(cc.values[p, s])
 
     def set_entry(self, p: int, vid: int, time: float, *, time_var=0.0,
                   samples=1, counters: Optional[Mapping[str, float]] = None
@@ -359,9 +434,10 @@ class PerfStore:
         self.time_var[p, vid] = time_var
         self.samples[p, vid] = samples
         for name, val in (counters or {}).items():
-            arr, cmask = self._counter_arrays(name)
-            arr[p, vid] = val
-            cmask[p, vid] = True
+            cc = self._counter_cols(name)
+            s = cc.slot(vid)
+            cc.values[p, s] = val
+            cc.mask[p, s] = True
 
     # -- mapping API (back compat) -------------------------------------
     def __setitem__(self, key: Tuple[int, int], vec: PerfVector) -> None:
@@ -374,21 +450,27 @@ class PerfStore:
         self.time_var[p, vid] = vec.time_var
         self.samples[p, vid] = vec.samples
         # clear stale counters — value AND mask, so counter_matrix (which
-        # reads the raw arrays) never sees a leftover from the old entry
-        for name, cmask in self._cmask.items():
-            cmask[p, vid] = False
-            self._counters[name][p, vid] = 0.0
+        # reads the sparse columns) never sees a leftover from the old entry
+        for cc in self._counters.values():
+            s = cc.slot_of.get(vid)
+            if s is not None:
+                cc.mask[p, s] = False
+                cc.values[p, s] = 0.0
         for name, val in vec.counters.items():
-            arr, cmask = self._counter_arrays(name)
-            arr[p, vid] = val
-            cmask[p, vid] = True
+            cc = self._counter_cols(name)
+            s = cc.slot(vid)
+            cc.values[p, s] = val
+            cc.mask[p, s] = True
 
     def __getitem__(self, key: Tuple[int, int]) -> PerfVector:
         p, vid = key
         if vid >= self._cols or not self._mask[p, vid]:
             raise KeyError(key)
-        counters = {name: float(self._counters[name][p, vid])
-                    for name, cmask in self._cmask.items() if cmask[p, vid]}
+        counters = {}
+        for name, cc in self._counters.items():
+            s = cc.slot_of.get(vid)
+            if s is not None and cc.mask[p, s]:
+                counters[name] = float(cc.values[p, s])
         return PerfVector(time=float(self.time[p, vid]),
                           time_var=float(self.time_var[p, vid]),
                           samples=int(self.samples[p, vid]),
@@ -422,12 +504,20 @@ class PerfStore:
         for key in self.keys():
             yield key, self[key]
 
+    def counter_nbytes(self) -> int:
+        """Sparse counter storage (used columns only)."""
+        return sum(cc.nbytes() for cc in self._counters.values())
+
+    def counter_dense_nbytes(self) -> int:
+        """What the counters would cost as dense (n_procs, V) matrices —
+        the pre-sparsification layout, for storage-win reporting."""
+        per = self.n_procs * self._cols * 9        # f64 value + bool mask
+        return per * len(self._counters)
+
     def nbytes(self) -> int:
         base = (self.time.nbytes + self.time_var.nbytes + self.samples.nbytes
                 + self._mask.nbytes)
-        for name in self._counters:
-            base += self._counters[name].nbytes + self._cmask[name].nbytes
-        return base
+        return base + self.counter_nbytes()
 
 
 class CommIndex:
@@ -541,9 +631,10 @@ class PPG:
     """Program performance graph: the PSG replicated across ``n_procs``
     SPMD processes + inter-process communication dependence + perf data.
 
-    PPG vertex id = (proc, vid).  Perf data lives in a dense
-    :class:`PerfStore`; collective comm dependence is implicit (participant
-    groups in a :class:`CommIndex`), p2p edges explicit.
+    PPG vertex id = (proc, vid).  Perf data lives in a :class:`PerfStore`
+    (dense time/var/sample matrices, column-sparse counters); collective
+    comm dependence is implicit (participant groups in a
+    :class:`CommIndex`), p2p edges explicit.
     """
 
     def __init__(self, psg: PSG, n_procs: int,
@@ -573,6 +664,17 @@ class PPG:
     def times_matrix(self) -> np.ndarray:
         """(n_procs, n_vertices) time matrix — the detectors' input."""
         return self.perf.time_matrix(len(self.psg.vertices))
+
+    def var_matrix(self) -> np.ndarray:
+        """(n_procs, n_vertices) time-variance matrix (zero where unset) —
+        input to the variance-weighted ("var") merge strategy."""
+        n = len(self.psg.vertices)
+        var = self.perf.time_var
+        if n <= var.shape[1]:
+            return var[:, :n]
+        out = np.zeros((self.n_procs, n))
+        out[:, :var.shape[1]] = var
+        return out
 
     def counter_matrix(self, name: str) -> np.ndarray:
         return self.perf.counter_matrix(name, len(self.psg.vertices))

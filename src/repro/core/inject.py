@@ -89,10 +89,13 @@ def simulate(psg: PSG, n_procs: int,
     base_times(proc, vid) -> seconds for Comp/atomic-control vertices.
     inject: {(proc, vid): extra_seconds} delay injection.
 
-    Perf data is written straight into a dense :class:`PerfStore` — whole
+    Perf data is written straight into a :class:`PerfStore` — whole
     (proc,)-columns at a time — so simulation cost is O(V) vectorized steps,
     not O(P*V) Python object churn; only p2p pairs are walked sequentially
-    (their clock updates are order-dependent).
+    (their clock updates are order-dependent).  Counter writes go through
+    the store's column-sparse layout: ``wait_s``/``comm_bytes`` materialize
+    only at Comm vertices, ``flops``/``bytes`` only at Comp vertices, so
+    counter memory tracks the defining vertex subset, not (P, V).
     """
     inject = dict(inject or {})
     inj_by_vid: Dict[int, Dict[int, float]] = {}

@@ -19,7 +19,9 @@ def build_ppg(psg: PSG, n_procs: int, perf: Optional[PerfInput] = None,
     ``perf`` is a ready :class:`PerfStore` (the simulator fast path), or
     {vid: PerfVector} (replicated to all processes — the single-controller
     measured channel), or {proc: {vid: PerfVector}} for per-process data
-    (per-shard timing).
+    (per-shard timing).  Either way counters land in the store's
+    column-sparse layout (one column block per counter, only at the
+    vertices that carry it).
     """
     store: Optional[PerfStore] = None
     if isinstance(perf, PerfStore):

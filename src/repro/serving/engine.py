@@ -15,6 +15,23 @@ the length leaf with the host-tracked per-slot positions.
 Sampling is reproducible under any batching order: greedy, or Gumbel
 argmax keyed on (request uid, position) via a counter-based PRNG — the
 serving analogue of the data pipeline's determinism.
+
+Three defenses keep token streams reproducible across engine instances:
+
+* host-side bookkeeping arrays (``slot_pos``, ``last_token``) are
+  snapshotted before entering jax — on CPU ``jnp.asarray`` may zero-copy-
+  alias an aligned numpy buffer, so mutating them while the asynchronously
+  dispatched decode still reads them was an alignment-dependent data race.
+* the compiled decode step is shared per (ModelBundle, shapes) — XLA CPU
+  compilation is not bit-deterministic, so two separately-compiled
+  executables of the same program can round reductions differently, and a
+  ~1e-6 logit wobble flips argmax at near-ties.  One engine, one hundred
+  engines: same executable, same logits.
+* sampling uses a near-tie-stable argmax: every candidate within ``_TIE_TOL``
+  of the max is a tie, resolved to the lowest token id.  Executables with
+  *different* shapes (a request served alone vs in a batch) can't share a
+  compilation, so their residual rounding skew is absorbed by the tie
+  tolerance instead.
 """
 from __future__ import annotations
 
@@ -29,6 +46,31 @@ import numpy as np
 from repro.models.api import ModelBundle
 
 Pytree = Any
+
+# logits gaps below this are ties (resolved to the lowest token id); must
+# sit well above cross-compilation rounding skew (~1e-6 at logit scale ~3)
+# and well below real logit gaps (~1e-1 for the smoke models)
+_TIE_TOL = 1e-4
+
+
+def _shared_jit(model: ModelBundle) -> Callable:
+    """One compiled decode per ModelBundle — every engine built from the
+    same bundle reuses the same executable (and its shape-keyed caches).
+    Memoized on the bundle itself so the jit wrapper's lifetime is tied to
+    the bundle, not pinned in a global cache."""
+    fn = getattr(model, "_decode_jit", None)
+    if fn is None:
+        fn = jax.jit(model.decode_step)
+        # ModelBundle is a frozen dataclass; store the derived memo the
+        # same way frozen __init__ does
+        object.__setattr__(model, "_decode_jit", fn)
+    return fn
+
+
+def _stable_argmax(z: np.ndarray, tol: float = _TIE_TOL) -> int:
+    """Lowest index within ``tol`` of the max — invariant to sub-``tol``
+    logit noise from separately-compiled executables."""
+    return int(np.argmax(z >= z.max() - tol))
 
 
 @dataclasses.dataclass
@@ -71,14 +113,20 @@ class ServingEngine:
         self.slot_out: List[List[int]] = [[] for _ in range(batch_slots)]
         self.slot_t0 = np.zeros(batch_slots, np.float64)
         self.last_token = np.zeros(batch_slots, np.int32)
-        self._decode = jax.jit(model.decode_step)
+        self._decode = _shared_jit(model)
         self.completed: List[Result] = []
         self.decode_steps = 0
 
     # ------------------------------------------------------------------
     def _with_lengths(self, cache: Pytree) -> Pytree:
-        """Override the per-slot length leaf with host-tracked positions."""
-        pos = jnp.asarray(self.slot_pos)
+        """Override the per-slot length leaf with host-tracked positions.
+
+        ``slot_pos`` is snapshotted (np.array copy): on CPU ``jnp.asarray``
+        may zero-copy-alias an aligned host buffer, and the engine mutates
+        ``slot_pos`` while the (asynchronously dispatched) decode still
+        reads it — the alignment-dependent race behind historical
+        sampling nondeterminism."""
+        pos = jnp.asarray(np.array(self.slot_pos))
 
         def fix(leaf):
             if (hasattr(leaf, "dtype") and leaf.dtype == jnp.int32
@@ -161,12 +209,12 @@ class ServingEngine:
         req = self.slot_req[slot]
         row = np.asarray(logits)[slot, -1]
         if req.temperature <= 0.0:
-            return int(row.argmax())
+            return _stable_argmax(row)
         key = jax.random.fold_in(
             jax.random.fold_in(jax.random.PRNGKey(req.seed), req.uid),
             position)
         g = np.asarray(jax.random.gumbel(key, row.shape))
-        return int((row / req.temperature + g).argmax())
+        return _stable_argmax(row / req.temperature + g)
 
     # ------------------------------------------------------------------
     def step(self) -> int:
@@ -174,7 +222,9 @@ class ServingEngine:
         active = [i for i, d in enumerate(self.slot_done) if not d]
         if not active:
             return 0
-        tok = np.asarray(self.last_token).reshape(-1, 1)
+        # snapshot: last_token is updated per-slot below while the decode
+        # may still be running (see _with_lengths on host-buffer aliasing)
+        tok = np.array(self.last_token).reshape(-1, 1)
         logits, self.cache = self._step_model(tok)
         for i in active:
             self.slot_pos[i] += 1

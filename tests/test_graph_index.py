@@ -1,10 +1,16 @@
 """Indexed graph core: indexes vs brute force, dense store vs dict API,
-implicit comm groups vs materialized edges, detect/backtrack equivalence.
+sparse counter columns vs a dense reference, implicit comm groups vs
+materialized edges, detect/backtrack equivalence, and jitted detection vs
+the numpy reference (including the all-jax-absent fallback path).
 
 The brute-force references are verbatim ports of the pre-index scalar
 implementations, so these properties pin the refactor to the old
 semantics."""
 import math
+import os
+import subprocess
+import sys
+import textwrap
 
 import numpy as np
 import pytest
@@ -153,6 +159,74 @@ def test_ppg_get_time_defaults_zero():
     ppg = build_ppg(g, 4)
     assert ppg.get_time(2, v.vid) == 0.0
     assert ppg.times_across_procs(v.vid) == [0.0] * 4
+
+
+# ---------------------------------------------------------------------------
+# sparse counter columns vs dense reference
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(n_procs=st.integers(1, 8), n_vertices=st.integers(1, 10),
+       seed=st.integers(0, 10**6), n_ops=st.integers(1, 40))
+def test_sparse_counters_match_dense_reference(n_procs, n_vertices, seed,
+                                               n_ops):
+    """Random write sequences through every store entry point: the sparse
+    column layout must be observationally identical to dense (P, V)
+    matrices, via counter_matrix, counter_columns, counter_at and the
+    mapping API."""
+    rng = np.random.default_rng(seed)
+    store = PerfStore(n_procs, n_vertices)
+    names = ["wait_s", "flops", "bytes"]
+    v_max = n_vertices + 6                      # exercise growth past init
+    dense = {nm: np.zeros((n_procs, v_max)) for nm in names}
+    dmask = {nm: np.zeros((n_procs, v_max), bool) for nm in names}
+    for _ in range(n_ops):
+        op = int(rng.integers(3))
+        vid = int(rng.integers(v_max))
+        p = int(rng.integers(n_procs))
+        counters = {nm: float(rng.uniform(0.1, 10.0))
+                    for nm in names if rng.uniform() < 0.6}
+        if op == 0:
+            store.set_entry(p, vid, float(rng.uniform()), counters=counters)
+            for nm, val in counters.items():
+                dense[nm][p, vid], dmask[nm][p, vid] = val, True
+        elif op == 1:
+            store.set_column(vid, rng.uniform(0.1, 1.0, n_procs),
+                             counters=counters)
+            for nm, val in counters.items():
+                dense[nm][:, vid], dmask[nm][:, vid] = val, True
+        else:                                   # overwrite clears stale
+            store[(p, vid)] = PerfVector(time=float(rng.uniform()),
+                                         counters=counters)
+            for nm in names:
+                dense[nm][p, vid], dmask[nm][p, vid] = 0.0, False
+            for nm, val in counters.items():
+                dense[nm][p, vid], dmask[nm][p, vid] = val, True
+    for nm in names:
+        ref = np.where(dmask[nm], dense[nm], 0.0)
+        assert np.array_equal(store.counter_matrix(nm, v_max), ref)
+        vids, values, mask = store.counter_columns(nm)
+        assert len(set(vids.tolist())) == len(vids)      # one slot per vid
+        recon = np.zeros((n_procs, v_max))
+        recon[:, vids] = np.where(mask, values, 0.0)
+        assert np.array_equal(recon, ref)
+        for p in range(n_procs):
+            for vid in range(v_max):
+                want = dense[nm][p, vid] if dmask[nm][p, vid] else -1.0
+                assert store.counter_at(nm, p, vid, default=-1.0) == want
+    for key in store.keys():
+        for nm, val in store[key].counters.items():
+            assert dmask[nm][key] and dense[nm][key] == val
+
+
+def test_counter_storage_tracks_defining_subset():
+    """A counter written at 2 of 100 columns must cost ~2 columns, not a
+    dense (P, 100) matrix — the V/|Comm| memory claim."""
+    store = PerfStore(64, 100)
+    for vid in (3, 97):
+        store.set_column(vid, 1.0, counters={"wait_s": 0.5})
+    assert store.counter_nbytes() < store.counter_dense_nbytes() / 10
+    assert store.counter_names() == ["wait_s"]
 
 
 # ---------------------------------------------------------------------------
@@ -375,6 +449,143 @@ def test_detect_non_scalable_matches_reference(seed, strategy):
     for d in got:
         assert d.slope == pytest.approx(ref_by_vid[d.vid][0], rel=1e-9)
         assert d.share == pytest.approx(ref_by_vid[d.vid][1], rel=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# jitted detection vs the numpy reference
+# ---------------------------------------------------------------------------
+
+from repro.core.detect import JIT_STRATEGIES as JIT_MERGES  # noqa: E402
+
+
+def _random_series(seed):
+    g = PSG()
+    root = g.new_vertex("Root", "root")
+    g.root = root.vid
+    rng = np.random.default_rng(seed)
+    bad = set(rng.choice(6, 2, replace=False).tolist())
+    for i in range(6):
+        g.add_edge(root.vid, g.new_vertex(COMP, f"c{i}",
+                                          parent=root.vid).vid, "control")
+
+    def time_at(p, vid, n):
+        if vid - 1 in bad:
+            return 1.0 * (0.6 + 0.4 / n)
+        return 1.0 / n
+
+    return simulate_series(g, [4, 8, 16, 32], time_at, jitter=0.01,
+                           seed=seed)
+
+
+@settings(max_examples=15, deadline=None)
+@given(p=st.integers(1, 16), v=st.integers(1, 12), seed=st.integers(0, 10**6),
+       strategy=st.sampled_from(JIT_MERGES))
+def test_merge_matrix_jax_matches_numpy(p, v, seed, strategy):
+    pytest.importorskip("jax")
+    from repro.core import detect_jax
+    rng = np.random.default_rng(seed)
+    t = rng.uniform(0.0, 1.0, (p, v))
+    t[rng.uniform(size=(p, v)) < 0.3] = 0.0
+    var = rng.uniform(0.0, 0.1, (p, v))
+    got = detect_jax.merge_matrix(t, strategy, var=var)
+    ref = _merge_matrix(t, strategy, var=var)
+    assert np.allclose(got, ref, rtol=1e-12, atol=1e-15)
+
+
+@settings(max_examples=15, deadline=None)
+@given(p=st.integers(1, 12), v=st.integers(1, 8), seed=st.integers(0, 10**6))
+def test_merge_var_matches_scalar(p, v, seed):
+    rng = np.random.default_rng(seed)
+    t = rng.uniform(0.0, 1.0, (p, v))
+    t[rng.uniform(size=(p, v)) < 0.3] = 0.0
+    var = rng.uniform(0.0, 0.1, (p, v))
+    got = _merge_matrix(t, "var", var=var)
+    for col in range(v):
+        ref = _merge(t[:, col].tolist(), "var",
+                     variances=var[:, col].tolist())
+        assert got[col] == pytest.approx(ref, abs=1e-12)
+    # without variance data every weight is equal: degrades to "mean"
+    assert np.allclose(_merge_matrix(t, "var"), _merge_matrix(t, "mean"),
+                       rtol=1e-9)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10**6), strategy=st.sampled_from(JIT_MERGES))
+def test_detect_non_scalable_jax_matches_numpy(seed, strategy):
+    pytest.importorskip("jax")
+    series = _random_series(seed)
+    a = detect_non_scalable(series, strategy=strategy, top_k=100,
+                            backend="numpy")
+    b = detect_non_scalable(series, strategy=strategy, top_k=100,
+                            backend="jax")
+    assert [d.vid for d in a] == [d.vid for d in b]
+    for x, y in zip(a, b):
+        assert y.slope == pytest.approx(x.slope, rel=1e-9)
+        assert y.share == pytest.approx(x.share, rel=1e-9)
+        assert sorted(y.times) == sorted(x.times)
+        for scale, t in x.times.items():
+            assert y.times[scale] == pytest.approx(t, rel=1e-9)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n_procs=st.integers(2, 16), seed=st.integers(0, 10**6),
+       thd=st.floats(1.1, 3.0))
+def test_detect_abnormal_jax_matches_numpy(n_procs, seed, thd):
+    pytest.importorskip("jax")
+    g = PSG()
+    root = g.new_vertex("Root", "root")
+    g.root = root.vid
+    rng = np.random.default_rng(seed)
+    vids = [g.new_vertex(COMP, f"c{i}", parent=root.vid).vid
+            for i in range(6)]
+    perf = {p: {vid: PerfVector(time=float(rng.uniform(0, 1))
+                                if rng.uniform() > 0.2 else 0.0,
+                                time_var=float(rng.uniform(0, 0.01)))
+                for vid in vids} for p in range(n_procs)}
+    ppg = build_ppg(g, n_procs, perf)
+    a = detect_abnormal(ppg, abnorm_thd=thd, backend="numpy")
+    b = detect_abnormal(ppg, abnorm_thd=thd, backend="jax")
+    assert [(x.vid, x.proc) for x in a] == [(y.vid, y.proc) for y in b]
+    for x, y in zip(a, b):
+        assert y.time == pytest.approx(x.time, abs=1e-15)
+        assert y.typical == pytest.approx(x.typical, abs=1e-12)
+
+
+def test_analysis_layer_and_auto_backend_run_without_jax():
+    """The jax-absent fallback path, end to end in a clean interpreter:
+    importing the analysis layer and running both detectors with the
+    default backend must never pull jax into the process."""
+    code = textwrap.dedent("""
+        import sys
+        from repro.core import PSG, COMP, backtrack, detect_abnormal, \\
+            detect_non_scalable
+        from repro.core.detect import _resolve_backend
+        from repro.core.inject import simulate, simulate_series
+        assert "jax" not in sys.modules, "lazy analysis layer imported jax"
+        assert _resolve_backend("auto") is None
+        g = PSG()
+        root = g.new_vertex("Root", "root")
+        g.root = root.vid
+        for i in range(4):
+            v = g.new_vertex(COMP, f"c{i}", parent=root.vid)
+            g.add_edge(root.vid, v.vid, "control")
+        series = simulate_series(
+            g, [2, 4, 8],
+            lambda p, vid, n: 0.5 + 1.0 / n if vid == 1 else 1.0 / n)
+        ns = detect_non_scalable(series)
+        ab = detect_abnormal(series[8])
+        paths = backtrack(series[8], ns, ab)
+        assert ns and ns[0].vid == 1
+        assert "jax" not in sys.modules, "detection pulled jax in"
+        print("fallback-ok")
+    """)
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = os.path.abspath(src)
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=120)
+    assert out.returncode == 0, out.stderr
+    assert "fallback-ok" in out.stdout
 
 
 # ---------------------------------------------------------------------------

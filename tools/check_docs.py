@@ -1,0 +1,89 @@
+"""Executable-documentation checker (`make docs-check`).
+
+Extracts every fenced code block from docs/*.md and README.md and checks
+it:
+
+* ```` ```python ```` blocks are EXECUTED, each file's blocks sharing one
+  namespace (so a doc can build an example across several blocks, like a
+  doctest session).  Anything raising fails the check with file:line.
+* ```` ```python no-run ```` blocks are compiled only (syntax check) —
+  for snippets that need heavyweight optional deps (jax model builds) or
+  would be slow; keep these rare.
+* other fences (bash, text, ...) are ignored.
+
+Blocks run with src/ on sys.path and must not require jax: the analysis
+layer documented here is the jax-free one, and this check is wired into
+`make check` next to the jax-free --smoke canary.
+
+    PYTHONPATH=src python tools/check_docs.py [files...]
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "src"))
+
+FENCE = re.compile(r"^```(\S*)\s*(.*)$")
+
+
+def blocks(path: pathlib.Path):
+    """Yield (line_number, info_string, source) per fenced block."""
+    lines = path.read_text().splitlines()
+    i = 0
+    while i < len(lines):
+        m = FENCE.match(lines[i])
+        if m and m.group(1):
+            info, tag = m.group(1), m.group(2).strip()
+            start = i + 1
+            body = []
+            i += 1
+            while i < len(lines) and not lines[i].startswith("```"):
+                body.append(lines[i])
+                i += 1
+            yield start, info, tag, "\n".join(body)
+        i += 1
+
+
+def check_file(path: pathlib.Path) -> int:
+    failures = 0
+    namespace: dict = {"__name__": f"docs_check::{path.name}"}
+    for lineno, info, tag, src in blocks(path):
+        if info != "python":
+            continue
+        label = f"{path.relative_to(REPO)}:{lineno}"
+        try:
+            code = compile(src, str(label), "exec")
+            if tag != "no-run":
+                exec(code, namespace)
+        except Exception as e:                     # noqa: BLE001
+            failures += 1
+            print(f"FAIL {label}: {type(e).__name__}: {e}")
+        else:
+            mode = "compiled" if tag == "no-run" else "ran"
+            print(f"ok   {label} ({mode})")
+    return failures
+
+
+def main(argv) -> int:
+    targets = [pathlib.Path(a).resolve() for a in argv[1:]]
+    if not targets:
+        targets = sorted((REPO / "docs").glob("*.md")) + [REPO / "README.md"]
+    failures = 0
+    for t in targets:
+        if t.exists():
+            failures += check_file(t)
+        else:
+            failures += 1
+            print(f"FAIL {t}: missing file")
+    if failures:
+        print(f"{failures} documentation block(s) failed")
+        return 1
+    print("all documentation blocks pass")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv))
