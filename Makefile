@@ -1,22 +1,26 @@
 PYTHONPATH := src:.
 export PYTHONPATH
 
-.PHONY: check test smoke bench docs-check
+.PHONY: check test smoke bench bench-smoke docs-check
 
 test:
 	python -m pytest -x -q
 
-smoke:
+# jax-free graph-core benchmark at tiny scales: the replay/simulate fast
+# path and its internal O(P) comm-storage + sparse-counter + wavefront==
+# sequential assertions run on every `make check`
+bench-smoke:
 	python -m benchmarks.run --smoke
+
+smoke: bench-smoke
 
 # execute every code block in docs/*.md and README.md (jax-free)
 docs-check:
 	python tools/check_docs.py
 
-# tier-1 tests + the graph-core smoke benchmark (its internal O(P)
-# comm-storage and sparse-counter assertions make perf regressions fail
+# tier-1 tests + the graph-core smoke benchmark (perf regressions fail
 # loudly) + executable documentation
-check: test smoke docs-check
+check: test bench-smoke docs-check
 
 bench:
 	python -m benchmarks.run

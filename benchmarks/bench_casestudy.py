@@ -20,10 +20,13 @@ import time
 
 import jax
 
+import numpy as np
+
 from benchmarks.common import bench_setup, emit
 from repro.core import (COMM, GraphProfiler, backtrack, detect_abnormal,
                         detect_non_scalable, root_causes)
-from repro.core.inject import schedule, simulate, simulate_series
+from repro.core.inject import (schedule, seeded_base_times, simulate,
+                               simulate_series, vectorized_base_times)
 
 
 def _profiled_psg(arch: str):
@@ -50,7 +53,8 @@ def case_straggler_loop(arch="tinyllama-1.1b", n_procs=128) -> None:
              if v.kind == "Loop" and v.vid in schedule(psg)]
     target = loops[0] if loops else schedule(psg)[0]
     t0 = time.perf_counter()
-    res = simulate(psg, n_procs, lambda p, vid: base.get(vid, 0.0),
+    res = simulate(psg, n_procs,
+                   seeded_base_times(base, n_vertices=len(psg.vertices)),
                    inject={(17, target): 0.5})
     ab = detect_abnormal(res.ppg)
     paths = backtrack(res.ppg, [], ab)
@@ -68,11 +72,12 @@ def case_load_imbalance(arch="moonshot-v1-16b-a3b", n_procs=64) -> None:
     target = max((v for v in sched if psg.vertices[v].kind in
                   ("Comp", "Loop")), key=lambda v: base.get(v, 0.0))
 
-    def times(p, vid):
+    @vectorized_base_times
+    def times(procs, vid):
         t = base.get(vid, 0.0)
         if vid == target:
-            t *= 1.0 + 0.8 * (p % 7 == 3)     # imbalanced subset of procs
-        return t
+            return t * (1.0 + 0.8 * (procs % 7 == 3))   # imbalanced subset
+        return np.full(procs.shape, t)
 
     t0 = time.perf_counter()
     res = simulate(psg, n_procs, times)

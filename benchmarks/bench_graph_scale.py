@@ -1,31 +1,45 @@
-"""Graph-core scalability: build + detect + backtrack at 512..8192 procs.
+"""Graph-core scalability: build + simulate + detect + backtrack at 512..8192.
 
-The indexed-graph acceptance benchmark: a synthetic-but-realistic training
-step PSG (comp chain + halo-exchange p2p ring + grouped and global
-collectives) is simulated with an injected straggler, then the full
-post-mortem pipeline runs at 512/2048/8192 processes.  Reported per scale:
+The indexed-graph + replay-engine acceptance benchmark: a synthetic-but-
+realistic training step PSG (comp chain + halo-exchange p2p ring + grouped
+and global collectives) is simulated with an injected straggler, then the
+full post-mortem pipeline runs at 512/2048/8192 processes.  Reported per
+scale:
 
-  * wall time for PPG build (simulate), detection (numpy AND — in the full
-    run, when jax is importable — the jitted backend, post-warmup), and
-    backtracking;
+  * ``simulate_series_s`` — one stacked multi-scale replay pass (the PPG
+    series the detectors consume; also reported as ``build_s``);
+  * ``simulate_s`` vs ``simulate_seq_s`` — the wavefront replay engine
+    against the retained PR-2-style baseline (per-pair Python p2p loop +
+    scalar ``base_times`` callbacks) on a p2p-HEAVY schedule; the outputs
+    are asserted bit-identical and the speedup is asserted >= 10x at the
+    top scale (the vectorized-replay acceptance criterion);
+  * wall time for detection (numpy AND — in the full run, when jax is
+    importable — the jitted backend, post-warmup) and backtracking;
   * ``ppg.nbytes()`` and the comm-dependence share of it — collective
     dependence is stored as participant groups, so comm bytes grow O(P),
-    not O(P²) (asserted: a materialized 8192-clique would need >1 GB);
+    not O(P²) (asserted);
   * counter storage: the column-sparse layout vs the dense (P, V)
-    equivalent (asserted smaller — counters only materialize at the
-    vertex subset that defines them).
+    equivalent (asserted smaller).
 
-The smoke mode (`run.py --smoke` / `make check`) imports only the lazy
-analysis layer of `repro.core` and never touches jax — it is the jax-free
-canary.  The full run additionally times `backend="jax"` detection.
+``run`` returns the rows as dicts; ``benchmarks/run.py`` snapshots them to
+``BENCH_graph_scale.json`` so the perf trajectory is machine-readable
+across PRs.
+
+The smoke mode (`run.py --smoke` / `make check` via `make bench-smoke`)
+imports only the lazy analysis layer of `repro.core` and never touches jax
+— it is the jax-free canary.  The full run additionally times
+`backend="jax"` detection.
 """
 from __future__ import annotations
 
 import time
+from typing import Dict, List
+
+import numpy as np
 
 from repro.core import (COMM, COMP, PSG, backtrack, detect_abnormal,
                         detect_non_scalable, root_causes)
-from repro.core.inject import simulate, simulate_series
+from repro.core.inject import simulate, simulate_series, vectorized_base_times
 
 FULL_SCALES = (512, 2048, 8192)
 SMOKE_SCALES = (8, 32)
@@ -35,6 +49,16 @@ def emit(name: str, us_per_call: float, derived: str = "") -> None:
     # local copy of benchmarks.common.emit: common.py imports jax + the
     # model zoo, which this pure-numpy benchmark must not depend on
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def halo_ring_pairs(n_procs: int) -> List:
+    """Ring-neighbor exchange posted in the standard even/odd interleave
+    (all even-sender pairs, then all odd-sender pairs) — how concurrent
+    halo exchanges are actually scheduled.  The interleave keeps the
+    order-dependent p2p semantics two wavefront rounds deep instead of an
+    artificial P-deep chain."""
+    return ([(p, (p + 1) % n_procs) for p in range(0, n_procs, 2)]
+            + [(p, (p + 1) % n_procs) for p in range(1, n_procs, 2)])
 
 
 def build_step_psg(n_comp: int = 24, n_procs_hint: int = 8) -> PSG:
@@ -56,8 +80,7 @@ def build_step_psg(n_comp: int = 24, n_procs_hint: int = 8) -> PSG:
             p2p = g.new_vertex(COMM, "ppermute", parent=root.vid,
                                source="model.py:halo")
             p2p.comm_kind, p2p.comm_bytes = "ppermute", 1e6
-            p2p.p2p_pairs = [(p, (p + 1) % n_procs_hint)
-                             for p in range(n_procs_hint)]
+            p2p.p2p_pairs = halo_ring_pairs(n_procs_hint)
             g.add_edge(prev, p2p.vid, "data")
             g.add_edge(root.vid, p2p.vid, "control")
             prev = p2p.vid
@@ -78,7 +101,41 @@ def build_step_psg(n_comp: int = 24, n_procs_hint: int = 8) -> PSG:
     return g
 
 
-def run(smoke: bool = False) -> None:
+def build_p2p_heavy_psg(n_comp: int = 8, n_procs_hint: int = 8,
+                        n_halo: int = 6) -> PSG:
+    """p2p-heavy schedule for the replay-engine acceptance measurement:
+    ``n_halo`` halo-exchange vertices (one full ring of pairs each)
+    interleaved with a comp chain, closed by a global all-reduce."""
+    g = PSG()
+    root = g.new_vertex("Root", "root")
+    g.root = root.vid
+    prev = None
+    for i in range(max(n_comp, n_halo)):
+        if i < n_comp:
+            v = g.new_vertex(COMP, f"stage{i}", parent=root.vid,
+                             source=f"model.py:{200 + i}")
+            v.flops = 1e12
+            if prev is not None:
+                g.add_edge(prev, v.vid, "data")
+            g.add_edge(root.vid, v.vid, "control")
+            prev = v.vid
+        if i < n_halo:
+            p2p = g.new_vertex(COMM, f"ppermute{i}", parent=root.vid,
+                               source=f"model.py:halo{i}")
+            p2p.comm_kind, p2p.comm_bytes = "ppermute", 1e6
+            p2p.p2p_pairs = halo_ring_pairs(n_procs_hint)
+            if prev is not None:
+                g.add_edge(prev, p2p.vid, "data")
+            g.add_edge(root.vid, p2p.vid, "control")
+            prev = p2p.vid
+    ar = g.new_vertex(COMM, "psum", parent=root.vid, source="optim.py:60")
+    ar.comm_kind, ar.comm_bytes = "all_reduce", 8e6
+    g.add_edge(prev, ar.vid, "data")
+    g.add_edge(root.vid, ar.vid, "control")
+    return g
+
+
+def run(smoke: bool = False) -> List[Dict]:
     scales = SMOKE_SCALES if smoke else FULL_SCALES
     detect_backend = "numpy"
     if not smoke:
@@ -87,17 +144,52 @@ def run(smoke: bool = False) -> None:
             detect_backend = "jax"
         except ImportError:
             pass
+    rows: List[Dict] = []
     for n_procs in scales:
         psg = build_step_psg(n_procs_hint=n_procs)
         target = next(v.vid for v in psg.vertices if v.kind == COMP)
+        straggler = min(4, n_procs - 1)
 
+        @vectorized_base_times
+        def time_at(procs, vid, n):
+            t = np.full(procs.shape, 0.128 / n)
+            if vid == target:
+                t[procs == straggler] += 0.05
+            return t
+
+        series_scales = [max(n_procs // 4, 2), max(n_procs // 2, 2), n_procs]
         t0 = time.perf_counter()
-        series = simulate_series(
-            psg, [max(n_procs // 4, 2), max(n_procs // 2, 2), n_procs],
-            lambda p, vid, n: (0.128 / n)
-            + (0.05 if (p == min(4, n_procs - 1) and vid == target) else 0.0))
-        build_s = time.perf_counter() - t0
+        series = simulate_series(psg, series_scales, time_at)
+        build_s = simulate_series_s = time.perf_counter() - t0
         top = series[n_procs]
+
+        # -- replay engine: wavefront vs the PR-2-style sequential loop --
+        hpsg = build_p2p_heavy_psg(n_procs_hint=n_procs)
+
+        @vectorized_base_times
+        def base_vec(procs, vid):
+            return np.full(procs.shape, 0.128 / n_procs)
+
+        def base_scalar(p, vid):
+            return 0.128 / n_procs
+
+        base_scalar.scalana_vectorized = False   # PR-2 baseline: P·V calls
+        simulate(hpsg, n_procs, base_vec, p2p="wavefront")      # warmup
+        t0 = time.perf_counter()
+        res_wave = simulate(hpsg, n_procs, base_vec, p2p="wavefront")
+        simulate_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        res_seq = simulate(hpsg, n_procs, base_scalar, p2p="sequential")
+        simulate_seq_s = time.perf_counter() - t0
+        assert np.array_equal(res_wave.ppg.times_matrix(),
+                              res_seq.ppg.times_matrix()) \
+            and res_wave.clocks == res_seq.clocks, \
+            "wavefront and sequential replay disagree"
+        simulate_speedup = simulate_seq_s / max(simulate_s, 1e-12)
+        if not smoke and n_procs == max(scales):
+            assert simulate_speedup >= 10.0, \
+                f"replay engine speedup {simulate_speedup:.1f}x < 10x " \
+                f"at {n_procs} procs"
 
         if detect_backend == "jax":
             # warm up the jit caches so detect_s reports steady-state
@@ -141,9 +233,33 @@ def run(smoke: bool = False) -> None:
         assert counter_nbytes < counter_dense, \
             f"counter storage not sparse: {counter_nbytes} >= {counter_dense}"
         found = any(node[1] == target for node, _, _ in rcs)
-        emit(f"graph_scale/{n_procs}procs",
+        row = {
+            "name": f"graph_scale/{n_procs}procs",
+            "n_procs": n_procs,
+            "simulate_s": simulate_s,
+            "simulate_seq_s": simulate_seq_s,
+            "simulate_speedup": simulate_speedup,
+            "simulate_series_s": simulate_series_s,
+            "build_s": build_s,
+            "detect_s": detect_s,
+            "detect_backend": detect_backend,
+            "detect_numpy_s": detect_np_s,
+            "backtrack_s": backtrack_s,
+            "ppg_bytes": nbytes,
+            "comm_bytes": comm_nbytes,
+            "clique_equiv_bytes": clique_nbytes,
+            "counter_bytes": counter_nbytes,
+            "counter_dense_equiv_bytes": counter_dense,
+            "paths": len(paths),
+            "root_cause_found": found,
+        }
+        rows.append(row)
+        emit(row["name"],
              (build_s + detect_s + backtrack_s) * 1e6,
-             f"build_s={build_s:.3f};detect_s={detect_s:.4f};"
+             f"simulate_s={simulate_s:.4f};simulate_seq_s="
+             f"{simulate_seq_s:.4f};simulate_speedup="
+             f"{simulate_speedup:.1f};simulate_series_s="
+             f"{simulate_series_s:.3f};detect_s={detect_s:.4f};"
              f"detect_backend={detect_backend};detect_numpy_s="
              f"{detect_np_s:.4f};backtrack_s={backtrack_s:.3f};"
              f"ppg_bytes={nbytes};comm_bytes={comm_nbytes};"
@@ -151,6 +267,7 @@ def run(smoke: bool = False) -> None:
              f"counter_bytes={counter_nbytes};"
              f"counter_dense_equiv_bytes={counter_dense};"
              f"paths={len(paths)};root_cause_found={found}")
+    return rows
 
 
 if __name__ == "__main__":

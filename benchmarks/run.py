@@ -12,13 +12,31 @@ Prints ``name,us_per_call,derived`` CSV lines.
   bench_graph_scale  graph-core scalability (512/2048/8192 procs)
 
 ``--smoke`` runs only the fast pure-numpy graph-core benchmark at tiny
-scales — the perf-regression canary wired into ``make check``.
+scales — the perf-regression canary wired into ``make check`` (via
+``make bench-smoke``).
+
+The graph-scale rows are snapshotted to ``BENCH_graph_scale.json``
+(override with ``--json PATH``, disable with ``--json ''``) so the perf
+trajectory — ``simulate_s`` / ``simulate_series_s`` / ``detect_s`` per
+scale — is machine-readable across PRs.  Smoke runs only write the
+snapshot when ``--json`` is passed explicitly, so tiny-scale numbers
+never clobber a full-run trajectory.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import pathlib
 import sys
 import traceback
+
+
+def write_snapshot(path: str, rows, smoke: bool) -> None:
+    if not path or not rows:
+        return
+    payload = {"bench": "graph_scale", "smoke": smoke, "rows": rows}
+    pathlib.Path(path).write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"wrote {path} ({len(rows)} rows)", file=sys.stderr)
 
 
 def main() -> None:
@@ -29,12 +47,19 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="fast mode: graph-core benchmark at tiny scales, "
                          "no jax model workloads")
+    ap.add_argument("--json", dest="json_path", default=None,
+                    help="graph-scale snapshot path (default "
+                         "BENCH_graph_scale.json on full runs; '' disables)")
     args = ap.parse_args()
+    json_path = args.json_path
+    if json_path is None:
+        json_path = "" if args.smoke else "BENCH_graph_scale.json"
 
     from benchmarks import bench_graph_scale
     if args.smoke:
         print("name,us_per_call,derived")
-        bench_graph_scale.run(smoke=True)
+        rows = bench_graph_scale.run(smoke=True)
+        write_snapshot(json_path, rows, smoke=True)
         return
 
     from benchmarks import (bench_casestudy, bench_detect, bench_overhead,
@@ -58,7 +83,9 @@ def main() -> None:
         if only and name not in only:
             continue
         try:
-            fn()
+            result = fn()
+            if name == "graph_scale":
+                write_snapshot(json_path, result, smoke=False)
         except Exception:
             failed.append(name)
             traceback.print_exc()

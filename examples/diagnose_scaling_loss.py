@@ -60,8 +60,9 @@ def main() -> None:
                   if psg.vertices[v].kind == "Loop")
     print(f"injected: +500ms on process {STRAGGLER} at "
           f"{psg.vertices[target].source} (vertex {target})\n")
-    res = simulate(psg, N_PROCS,
-                   lambda p, vid: perf[vid].time if vid in perf else 0.0,
+    # prof.base_times() seeds the replay engine's vectorized base_times
+    # channel from the measured profile (unprofiled vertices replay at 0)
+    res = simulate(psg, N_PROCS, prof.base_times(),
                    inject={(STRAGGLER, target): 0.5})
 
     # 4. ScalAna-detect: abnormal vertices + backtracking root cause

@@ -29,6 +29,8 @@ _EXPORTS = {
     "PerfStore": "graph", "PerfVector": "graph", "Vertex": "graph",
     "collective_bytes_total": "hlo", "parse_collectives": "hlo",
     "simulate": "inject", "simulate_series": "inject",
+    "p2p_rounds": "inject", "seeded_base_times": "inject",
+    "vectorized_base_times": "inject",
     "build_ppg": "ppg",
     "GraphProfiler": "profiler",
     "build_psg": "psg",
@@ -66,7 +68,8 @@ if TYPE_CHECKING:                     # static analyzers see eager imports
                                   CommIndex, CounterColumns, EdgeSet, PPG,
                                   PSG, PerfStore, PerfVector, Vertex)
     from repro.core.hlo import collective_bytes_total, parse_collectives
-    from repro.core.inject import simulate, simulate_series
+    from repro.core.inject import (p2p_rounds, seeded_base_times, simulate,
+                                   simulate_series, vectorized_base_times)
     from repro.core.ppg import build_ppg
     from repro.core.profiler import GraphProfiler
     from repro.core.psg import build_psg

@@ -18,7 +18,10 @@ import dataclasses
 import random
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from repro.core.graph import BRANCH, CALL, COMM, LOOP, PSG, PPG
+import numpy as np
+
+from repro.core.graph import (BRANCH, CALL, COMM, LOOP, PSG, PPG,
+                              vertex_pairs_array)
 from repro.core.hlo import CollectiveOp, parse_collectives, scope_tokens
 
 _EVENT_BYTES = 64      # what one uncompressed trace event would cost on disk
@@ -125,9 +128,11 @@ def add_comm_edges(ppg: PPG, psg: Optional[PSG] = None) -> None:
     psg = psg or ppg.psg
     for v in psg.by_kind(COMM):
         if v.p2p_pairs:
-            for (src, dst) in v.p2p_pairs:
-                if src < ppg.n_procs and dst < ppg.n_procs:
-                    ppg.add_p2p_edge(src, v.vid, dst, v.vid)
+            # bulk registration: one array append per vertex (folded into
+            # the explicit edge indexes lazily on first partner query)
+            arr = vertex_pairs_array(v)
+            keep = (arr[:, 0] < ppg.n_procs) & (arr[:, 1] < ppg.n_procs)
+            ppg.comm.add_p2p_batch(v.vid, arr[keep, 0], arr[keep, 1])
             continue
         groups = v.meta.get("replica_groups")
         if groups:

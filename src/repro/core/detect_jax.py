@@ -18,8 +18,11 @@ host.  Three kernels cover the pipeline:
 All kernels run in float64 (``jax.experimental.enable_x64`` — thread-local,
 so the rest of the process keeps jax's float32 default) and match the
 numpy reference in ``repro.core.detect`` to reduction-order rounding
-(~1e-15 relative).  "median" and "cluster" merges are per-column sorts with
-data-dependent cuts; they stay on the numpy path.
+(~1e-15 relative).  Setting ``SCALANA_DETECT_F32=1`` switches the kernels
+to float32 (no x64 context; the jit cache traces a separate f32 variant) —
+the accelerator-native precision, parity-tested against the f64 numpy
+reference to ~1e-4.  "median" and "cluster" merges are per-column sorts
+with data-dependent cuts; they stay on the numpy path.
 
 This module imports jax at module level and is therefore ONLY imported by
 ``detect``'s backend resolution — never from the lazy ``repro.core``
@@ -27,6 +30,8 @@ namespace — so the analysis layer stays importable without jax.
 """
 from __future__ import annotations
 
+import contextlib
+import os
 from typing import Optional, Sequence, Tuple
 
 import numpy as np
@@ -109,6 +114,18 @@ if HAS_JAX:
         return (over | dead_typical) & active
 
 
+def _precision():
+    """(dtype, x64-context) for the kernel wrappers.
+
+    float64 under a thread-local ``enable_x64`` by default; float32 with
+    no x64 context when ``SCALANA_DETECT_F32`` is set (truthy) — the
+    accelerator-native variant (checked per call so tests can toggle)."""
+    if os.environ.get("SCALANA_DETECT_F32", "").lower() in (
+            "1", "true", "on", "yes"):
+        return np.float32, contextlib.nullcontext()
+    return np.float64, enable_x64()
+
+
 def merge_matrix(t: np.ndarray, strategy: str,
                  var: Optional[np.ndarray] = None) -> np.ndarray:
     """Jitted columnwise merge over one (n_procs, V) matrix -> (V,).
@@ -117,11 +134,12 @@ def merge_matrix(t: np.ndarray, strategy: str,
     only selects the output row.  Reference-parity entry point for tests
     and small hosts; detection uses the fused kernels directly."""
     si = JIT_STRATEGIES.index(strategy)
-    with enable_x64():
-        t64 = jnp.asarray(np.asarray(t, np.float64)[None])
-        v64 = jnp.asarray(np.zeros_like(t, np.float64)[None] if var is None
-                          else np.asarray(var, np.float64)[None])
-        out = _merge_all_kernel(t64, v64)
+    dtype, ctx = _precision()
+    with ctx:
+        td = jnp.asarray(np.asarray(t, dtype)[None])
+        vd = jnp.asarray(np.zeros_like(t, dtype)[None] if var is None
+                         else np.asarray(var, dtype)[None])
+        out = _merge_all_kernel(td, vd)
     return np.asarray(out)[si, 0]
 
 
@@ -134,11 +152,12 @@ def non_scalable_arrays(scales: Sequence[int], t: np.ndarray, var: np.ndarray,
     """Run the fused non-scalable kernel; returns the ``strategy`` row of
     (M (S, V), slope (V,), share (V,), flagged (V,))."""
     si = JIT_STRATEGIES.index(strategy)
-    logp = np.log(np.asarray(scales, np.float64))
-    with enable_x64():
+    dtype, ctx = _precision()
+    logp = np.log(np.asarray(scales, dtype))
+    with ctx:
         M, slope, share, flagged = _non_scalable_kernel(
-            jnp.asarray(np.asarray(t, np.float64)),
-            jnp.asarray(np.asarray(var, np.float64)),
+            jnp.asarray(np.asarray(t, dtype)),
+            jnp.asarray(np.asarray(var, dtype)),
             jnp.asarray(logp), jnp.asarray(present),
             float(total_max), float(ideal_slope), float(slope_margin),
             float(min_share))
@@ -149,9 +168,10 @@ def non_scalable_arrays(scales: Sequence[int], t: np.ndarray, var: np.ndarray,
 def abnormal_arrays(t: np.ndarray, abnorm_thd: float, min_share: float,
                     step_time: float) -> Tuple[np.ndarray, np.ndarray]:
     """Run the abnormal kernel; returns ((P, V) flags, (V,) typical)."""
-    typical = np.median(np.asarray(t, np.float64), axis=0)
-    with enable_x64():
+    dtype, ctx = _precision()
+    typical = np.median(np.asarray(t, dtype), axis=0)
+    with ctx:
         flags = _abnormal_kernel(
-            jnp.asarray(np.asarray(t, np.float64)), jnp.asarray(typical),
+            jnp.asarray(np.asarray(t, dtype)), jnp.asarray(typical),
             float(abnorm_thd), float(min_share), float(step_time))
     return np.asarray(flags), typical

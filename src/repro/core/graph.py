@@ -27,6 +27,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import weakref
 from dataclasses import dataclass, field
 from typing import (Any, Dict, Iterable, Iterator, List, Mapping, Optional,
                     Sequence, Set, Tuple)
@@ -42,12 +43,46 @@ ROOT = "Root"
 
 KINDS = (LOOP, BRANCH, CALL, COMP, COMM, ROOT)
 
+
+def pairs_array(pairs) -> np.ndarray:
+    """(n, 2) intp array from a p2p pair list."""
+    if isinstance(pairs, np.ndarray):
+        return pairs.reshape(-1, 2).astype(np.intp, copy=False)
+    return np.asarray(pairs, np.intp).reshape(-1, 2)
+
 # collective primitives / HLO ops treated as Comm vertices
 COLLECTIVE_PRIMS = {
     "psum", "pmax", "pmin", "all_gather", "all_gather_invariant",
     "reduce_scatter", "all_to_all", "ppermute", "psum_scatter",
 }
 P2P_PRIMS = {"ppermute"}     # point-to-point-like (explicit src->dst pairs)
+
+
+# per-Vertex cache of the array form of p2p_pairs: converting an 8k-tuple
+# list costs milliseconds, and the replay engine + PPG assembly both need
+# it every call.  Keyed by id() with a weakref guard (Vertex is an
+# eq-dataclass, so not hashable); validated by CONTENT equality against a
+# snapshot copy — ~60x cheaper than reconversion (the snapshot shares the
+# tuple objects, so == short-circuits on identity) and sound under any
+# mutation, in-place element edits included.  Entries are dropped when
+# their vertex dies.
+_PAIRS_ARRAYS: Dict[int, Tuple] = {}
+
+
+def vertex_pairs_array(v: "Vertex") -> np.ndarray:
+    """Cached :func:`pairs_array` of ``v.p2p_pairs``."""
+    pairs = v.p2p_pairs
+    key = id(v)
+    hit = _PAIRS_ARRAYS.get(key)
+    if hit is not None and hit[0]() is v and hit[1] == pairs:
+        return hit[2]
+    arr = pairs_array(pairs)
+
+    def _drop(_ref, _key=key):
+        _PAIRS_ARRAYS.pop(_key, None)
+
+    _PAIRS_ARRAYS[key] = (weakref.ref(v, _drop), list(pairs), arr)
+    return arr
 
 
 @dataclass
@@ -411,6 +446,54 @@ class PerfStore:
             cc.values[idx, s] = val
             cc.mask[idx, s] = True
 
+    def set_entries(self, procs, vid: int, time, *, time_var=0.0, samples=1,
+                    counters: Optional[Mapping[str, Any]] = None,
+                    accumulate: bool = False) -> None:
+        """Batched scatter write at rows ``procs`` of one vertex column.
+
+        ``procs`` is an integer index array; ``time`` / ``time_var`` /
+        ``samples`` / counter values are scalars or arrays broadcast
+        against it.  With ``accumulate=True``, ``time`` and counter values
+        ADD onto the existing entries — repeated indices accumulate in
+        index order (``np.add.at``), which is the replay engine's per-round
+        scatter; an unset entry accumulates from 0.0.  ``time_var`` and
+        ``samples`` are always assigned, and the entry mask is set either
+        way.  This is also the write seam for streamed/multi-host PPG
+        assembly: a shard's (procs, values) block lands in one call.
+        """
+        procs = np.asarray(procs, np.intp)
+        if procs.size == 0:
+            return
+        self.ensure_columns(vid + 1)
+        # O(P) boolean scatter instead of an O(k log k) unique-sort: count
+        # newly-set entries (duplicate indices once) and detect duplicates
+        touched = np.zeros(self.n_procs, bool)
+        touched[procs] = True
+        unique = int(np.count_nonzero(touched)) == procs.size
+        col_mask = self._mask[:, vid]
+        self._count += int(np.count_nonzero(touched & ~col_mask))
+        col_mask |= touched
+        t = np.broadcast_to(np.asarray(time, float), procs.shape)
+        if not accumulate:
+            self.time[procs, vid] = t
+        elif unique:                           # no duplicates: gather-add
+            self.time[procs, vid] += t
+        else:
+            np.add.at(self.time[:, vid], procs, t)
+        self.time_var[procs, vid] = time_var
+        self.samples[procs, vid] = samples
+        for name, val in (counters or {}).items():
+            cc = self._counter_cols(name)
+            s = cc.slot(vid)
+            va = np.broadcast_to(np.asarray(val, float), procs.shape)
+            if not accumulate:
+                cc.values[procs, s] = va
+            elif unique:
+                cc.values[procs, s] += va
+            else:
+                np.add.at(cc.values[:, s], procs, va)
+            cc.mask[procs, s] = True
+
     def counter_at(self, name: str, p: int, vid: int,
                    default: float = 0.0) -> float:
         """O(1) counter read; ``default`` when the entry/counter is unset."""
@@ -423,20 +506,30 @@ class PerfStore:
         return float(cc.values[p, s])
 
     def set_entry(self, p: int, vid: int, time: float, *, time_var=0.0,
-                  samples=1, counters: Optional[Mapping[str, float]] = None
-                  ) -> None:
-        """Scalar write without PerfVector churn (counters merge in place)."""
+                  samples=1, counters: Optional[Mapping[str, float]] = None,
+                  accumulate: bool = False) -> None:
+        """Scalar write without PerfVector churn (counters merge in place).
+
+        ``accumulate=True`` adds ``time`` / counter values onto the
+        existing entry (from 0.0 when unset) — the scalar form of
+        :meth:`set_entries`' accumulate mode."""
         self.ensure_columns(vid + 1)
         if not self._mask[p, vid]:
             self._count += 1
             self._mask[p, vid] = True
-        self.time[p, vid] = time
+        if accumulate:
+            self.time[p, vid] += time
+        else:
+            self.time[p, vid] = time
         self.time_var[p, vid] = time_var
         self.samples[p, vid] = samples
         for name, val in (counters or {}).items():
             cc = self._counter_cols(name)
             s = cc.slot(vid)
-            cc.values[p, s] = val
+            if accumulate:
+                cc.values[p, s] += val
+            else:
+                cc.values[p, s] = val
             cc.mask[p, s] = True
 
     # -- mapping API (back compat) -------------------------------------
@@ -529,13 +622,19 @@ class CommIndex:
     API (membership / len / iteration) without materializing cliques.
     """
 
-    __slots__ = ("_p2p", "_p2p_preds", "_groups", "_group_sets")
+    __slots__ = ("_p2p", "_p2p_preds", "_groups", "_group_sets",
+                 "_p2p_batches")
 
     def __init__(self):
         self._p2p: Set[Tuple[Tuple[int, int], Tuple[int, int]]] = set()
         self._p2p_preds: Dict[Tuple[int, int], List[Tuple[int, int]]] = {}
         self._groups: Dict[int, List[Tuple[int, ...]]] = {}
         self._group_sets: Dict[int, List[frozenset]] = {}
+        # bulk-registered (vid, src_procs, dst_procs) edge blocks, folded
+        # into the explicit set/preds indexes lazily on first query — PPG
+        # assembly over an 8k-pair halo ring costs one array append, not
+        # 8k Python set inserts
+        self._p2p_batches: List[Tuple[int, np.ndarray, np.ndarray]] = []
 
     # -- construction --------------------------------------------------
     def add_p2p(self, src: Tuple[int, int], dst: Tuple[int, int]) -> None:
@@ -544,6 +643,23 @@ class CommIndex:
             return
         self._p2p.add(edge)
         self._p2p_preds.setdefault(dst, []).append(src)
+
+    def add_p2p_batch(self, vid: int, src_procs, dst_procs) -> None:
+        """Register p2p edges ``(src, vid) -> (dst, vid)`` in bulk, O(1)
+        until first queried (then folded in registration order, with the
+        same dedup as repeated :meth:`add_p2p` calls)."""
+        src = np.asarray(src_procs, np.intp)
+        dst = np.asarray(dst_procs, np.intp)
+        if src.size:
+            self._p2p_batches.append((int(vid), src, dst))
+
+    def _materialize_p2p(self) -> None:
+        if not self._p2p_batches:
+            return
+        batches, self._p2p_batches = self._p2p_batches, []
+        for vid, src, dst in batches:
+            for s, d in zip(src.tolist(), dst.tolist()):
+                self.add_p2p((s, vid), (d, vid))
 
     def add_group(self, vid: int, procs: Sequence[int]) -> None:
         group = tuple(procs)
@@ -571,6 +687,7 @@ class CommIndex:
         """Reverse-edge sources of (proc, vid): p2p preds + peers from
         EVERY group containing proc (deduplicated, like the old edge set —
         a vertex can carry several groups, e.g. staged collectives)."""
+        self._materialize_p2p()
         out = list(self._p2p_preds.get((proc, vid), ()))
         seen = set(out)
         for group, gs in zip(self._groups.get(vid, ()),
@@ -584,6 +701,7 @@ class CommIndex:
         return out
 
     def p2p_edges(self) -> Set[Tuple[Tuple[int, int], Tuple[int, int]]]:
+        self._materialize_p2p()
         return self._p2p
 
     # -- set-compatible view -------------------------------------------
@@ -592,6 +710,7 @@ class CommIndex:
             (sp, sv), (dp, dv) = edge
         except (TypeError, ValueError):
             return False
+        self._materialize_p2p()
         if (tuple(edge[0]), tuple(edge[1])) in self._p2p:
             return True
         if sv != dv or sp == dp:
@@ -602,6 +721,7 @@ class CommIndex:
         return False
 
     def __len__(self) -> int:
+        self._materialize_p2p()
         n = len(self._p2p)
         for groups in self._groups.values():
             n += sum(len(g) * (len(g) - 1) for g in groups)
@@ -610,6 +730,7 @@ class CommIndex:
     def __iter__(self):
         """Lazily generated edges — O(P²) to exhaust for a clique; use
         ``partners``/``groups_of`` in hot paths."""
+        self._materialize_p2p()
         yield from self._p2p
         for vid, groups in self._groups.items():
             for g in groups:
@@ -621,6 +742,7 @@ class CommIndex:
     def nbytes(self) -> int:
         """O(P) comm-dependence storage: 16B per explicit p2p edge + 8B per
         collective participant (vs 16B x |g|² for a materialized clique)."""
+        self._materialize_p2p()
         n = 16 * len(self._p2p)
         for groups in self._groups.values():
             n += sum(8 * len(g) for g in groups)

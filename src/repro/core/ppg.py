@@ -1,7 +1,7 @@
 """PPG assembly: per-process PSG replicas + perf vectors + comm edges."""
 from __future__ import annotations
 
-from typing import Dict, Mapping, Optional, Sequence, Union
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -10,6 +10,32 @@ from repro.core.graph import PPG, PSG, PerfStore, PerfVector
 
 PerfByProc = Mapping[int, Mapping[int, PerfVector]]
 PerfInput = Union[Mapping[int, PerfVector], "PerfByProc", PerfStore]
+
+
+def _store_by_proc(store: PerfStore, perf: "PerfByProc") -> None:
+    """Land {proc: {vid: PerfVector}} data as batched column scatters.
+
+    Entries are grouped by (vid, counter-name set) and written with one
+    :meth:`PerfStore.set_entries` call per group — the same seam a
+    streamed per-host shard merge uses — instead of one mapping-API write
+    per (proc, vid)."""
+    by_vid: Dict[int, List[Tuple[int, PerfVector]]] = {}
+    for p, d in perf.items():
+        for vid, vec in d.items():
+            by_vid.setdefault(vid, []).append((p, vec))
+    for vid, entries in by_vid.items():
+        groups: Dict[Tuple[str, ...], List[Tuple[int, PerfVector]]] = {}
+        for p, vec in entries:
+            groups.setdefault(tuple(sorted(vec.counters)), []).append((p, vec))
+        for names, es in groups.items():
+            procs = np.asarray([p for p, _ in es], np.intp)
+            store.set_entries(
+                procs, vid,
+                np.asarray([v.time for _, v in es]),
+                time_var=np.asarray([v.time_var for _, v in es]),
+                samples=np.asarray([v.samples for _, v in es]),
+                counters={nm: np.asarray([v.counters[nm] for _, v in es])
+                          for nm in names})
 
 
 def build_ppg(psg: PSG, n_procs: int, perf: Optional[PerfInput] = None,
@@ -40,8 +66,6 @@ def build_ppg(psg: PSG, n_procs: int, perf: Optional[PerfInput] = None,
                 for vid, vec in perf.items():
                     ppg.set_perf(0, vid, vec)
         else:                                    # {proc: {vid: vec}}
-            for p, d in perf.items():
-                for vid, vec in d.items():
-                    ppg.set_perf(p, vid, vec)
+            _store_by_proc(ppg.perf, perf)
     add_comm_edges(ppg)
     return ppg

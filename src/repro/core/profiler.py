@@ -147,6 +147,21 @@ class GraphProfiler:
                                         counters=counters)
         return out
 
+    def base_times(self, default: float = 0.0) -> Callable:
+        """Vectorized ``base_times`` seeded from the measured profile.
+
+        Returns a callable with the replay engine's vectorized contract
+        (``fn(procs_array, vid) -> seconds``; see
+        :func:`repro.core.inject.seeded_base_times`), so case studies
+        replay real measured models without O(P·V) Python callbacks.
+        Unprofiled vertices replay at ``default`` seconds.
+        """
+        from repro.core.inject import seeded_base_times
+        table = np.full(len(self.psg.vertices), float(default))
+        for vid, vec in self.perf_vectors().items():
+            table[vid] = vec.time
+        return seeded_base_times(table)
+
     def storage_bytes(self) -> int:
         """Bytes ScalAna retains: contracted PSG + per-vertex vectors."""
         vec_bytes = sum(8 * (3 + len(v.counters))

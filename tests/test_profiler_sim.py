@@ -42,6 +42,23 @@ def test_profiler_sampled_output_matches_compiled():
                                np.asarray(out_fast), rtol=1e-5)
 
 
+def test_profiler_seeds_vectorized_base_times():
+    """prof.base_times() drives the replay engine's vectorized channel:
+    every process replays the measured per-vertex mean, with no scalar
+    fallback (the callable carries the vectorization marker)."""
+    x, w = jnp.ones((16, 32)), jnp.ones((32, 32))
+    prof = GraphProfiler(_fn, (x, w), sample_every=2)
+    for _ in range(6):
+        prof.step(x, w)
+    base = prof.base_times()
+    assert getattr(base, "scalana_vectorized", False)
+    res = simulate(prof.psg, 4, base)
+    t = res.ppg.times_matrix()
+    for vid, vec in prof.perf_vectors().items():
+        if vec.samples > 0:
+            assert np.allclose(t[:, vid], vec.time)
+
+
 def test_profiler_storage_far_below_full_trace():
     """Storage is O(graph) while tracing is O(steps x events): at realistic
     step counts the gap is orders of magnitude (paper Table I)."""

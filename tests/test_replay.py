@@ -1,0 +1,437 @@
+"""Vectorized replay engine: wavefront p2p rounds vs the retained
+sequential reference, the vectorized base_times channel, one-pass
+multi-scale series, the PerfStore.set_entries scatter API, and the
+SCALANA_DETECT_F32 kernel variant.
+
+The sequential per-pair executor is the pre-vectorization semantics (plus
+the sender-accumulation fix), so ``wavefront == sequential`` — asserted
+BITWISE on clocks, times, and counters — pins the batched engine to the
+order-dependent reference."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import COMM, COMP, PPG, PSG, build_ppg, detect_non_scalable
+from repro.core.detect import _merge_matrix
+from repro.core.graph import PerfStore, PerfVector
+from repro.core.inject import (_p2p_rounds_greedy, default_comm_time,
+                               p2p_rounds, schedule, seeded_base_times,
+                               simulate, simulate_series,
+                               vectorized_base_times)
+
+
+# ---------------------------------------------------------------------------
+# random replay scenarios
+# ---------------------------------------------------------------------------
+
+@st.composite
+def replay_psg(draw):
+    """Random schedule of comp / p2p / collective vertices.  p2p pair
+    lists include chains (repeated processes), self-pairs and
+    out-of-range processes."""
+    n_procs = draw(st.integers(2, 10))
+    g = PSG()
+    root = g.new_vertex("Root", "root")
+    g.root = root.vid
+    prev = None
+    for i in range(draw(st.integers(2, 8))):
+        kind = draw(st.sampled_from([COMP, COMP, "p2p", "coll"]))
+        if kind == COMP:
+            v = g.new_vertex(COMP, f"c{i}", parent=root.vid)
+            v.flops = 1e9
+        elif kind == "coll":
+            v = g.new_vertex(COMM, f"psum{i}", parent=root.vid)
+            v.comm_kind, v.comm_bytes = "all_reduce", 1e4
+            if draw(st.booleans()) and n_procs >= 4:
+                half = n_procs // 2
+                v.meta["replica_groups"] = [list(range(half)),
+                                            list(range(half, n_procs))]
+        else:
+            v = g.new_vertex(COMM, f"pp{i}", parent=root.vid)
+            v.comm_kind, v.comm_bytes = "ppermute", 1e3
+            v.p2p_pairs = [(draw(st.integers(0, n_procs)),
+                            draw(st.integers(0, n_procs)))
+                           for _ in range(draw(st.integers(1, 12)))]
+        g.add_edge(root.vid, v.vid, "control")
+        if prev is not None:
+            g.add_edge(prev, v.vid, "data")
+        prev = v.vid
+    return g, n_procs
+
+
+def _assert_same_sim(a, b, n_vertices):
+    assert a.clocks == b.clocks                      # bitwise: list of f64
+    assert np.array_equal(a.ppg.times_matrix(), b.ppg.times_matrix())
+    assert np.array_equal(a.ppg.perf.samples[:, :n_vertices],
+                          b.ppg.perf.samples[:, :n_vertices])
+    for name in ("wait_s", "comm_bytes", "flops"):
+        assert np.array_equal(a.ppg.perf.counter_matrix(name, n_vertices),
+                              b.ppg.perf.counter_matrix(name, n_vertices))
+    assert a.ppg.meta["makespan"] == b.ppg.meta["makespan"]
+
+
+@settings(max_examples=25, deadline=None)
+@given(data=replay_psg(), seed=st.integers(0, 10**6), jit=st.booleans())
+def test_wavefront_matches_sequential_bitwise(data, seed, jit):
+    """The tentpole property: wavefront-round replay produces IDENTICAL
+    clocks, times, wait_s and PPG data to the retained sequential
+    reference, for arbitrary pair orders (chains, self-pairs)."""
+    g, n_procs = data
+    V = len(g.vertices)
+
+    def base(p, vid):                    # elementwise: works on both paths
+        return 0.01 * ((p * 7 + vid) % 5 + 1)
+
+    kw = dict(inject={(min(1, n_procs - 1), 1): 0.3},
+              jitter=0.05 if jit else 0.0, seed=seed)
+    wave = simulate(g, n_procs, base, p2p="wavefront", **kw)
+    seq = simulate(g, n_procs, base, p2p="sequential", **kw)
+    auto = simulate(g, n_procs, base, p2p="auto", **kw)
+    _assert_same_sim(wave, seq, V)
+    _assert_same_sim(auto, seq, V)
+
+
+@settings(max_examples=30, deadline=None)
+@given(n_procs=st.integers(1, 12), n_pairs=st.integers(0, 30),
+       seed=st.integers(0, 10**6))
+def test_p2p_rounds_match_greedy_reference(n_procs, n_pairs, seed):
+    """Vectorized peel == scalar greedy coloring, and rounds are valid:
+    within a round no process appears in two pairs, and each process's
+    pairs keep their original relative order across rounds."""
+    rng = np.random.default_rng(seed)
+    pairs = [(int(a), int(b))
+             for a, b in rng.integers(0, n_procs + 2, (n_pairs, 2))]
+    got = p2p_rounds(pairs, n_procs)
+    ref = _p2p_rounds_greedy(pairs, n_procs)
+    assert len(got) == len(ref)
+    for (gs, gd), (rs, rd) in zip(got, ref):
+        assert np.array_equal(gs, rs) and np.array_equal(gd, rd)
+    flat = []
+    for gs, gd in got:
+        used = list(gs) + [d for s, d in zip(gs, gd) if s != d]
+        assert len(used) == len(set(used)), "process appears twice in round"
+        flat.extend(zip(gs.tolist(), gd.tolist()))
+    kept = [(s, d) for s, d in pairs if s < n_procs and d < n_procs]
+    assert sorted(flat) == sorted(kept)
+
+
+def test_p2p_rounds_bail_on_degenerate_chain():
+    """A ring in natural order is a P-deep dependence chain: every round
+    would hold one pair, so bail=True reports None (the dispatcher then
+    uses the sequential executor) while the interleaved posting order
+    colors in two rounds."""
+    n = 128
+    chain = [(p, (p + 1) % n) for p in range(n)]
+    assert p2p_rounds(chain, n, bail=True) is None
+    assert len(p2p_rounds(chain, n)) == n
+    interleaved = ([(p, (p + 1) % n) for p in range(0, n, 2)]
+                   + [(p, (p + 1) % n) for p in range(1, n, 2)])
+    assert len(p2p_rounds(interleaved, n)) == 2
+
+
+# ---------------------------------------------------------------------------
+# sender-side accounting (the under-recording fix)
+# ---------------------------------------------------------------------------
+
+def _one_p2p_psg(pairs):
+    g = PSG()
+    root = g.new_vertex("Root", "root")
+    g.root = root.vid
+    v = g.new_vertex(COMM, "ppermute", parent=root.vid)
+    v.comm_kind, v.comm_bytes = "ppermute", 1e3
+    v.p2p_pairs = pairs
+    g.add_edge(root.vid, v.vid, "control")
+    return g, v
+
+
+@pytest.mark.parametrize("p2p", ["wavefront", "sequential"])
+def test_p2p_sender_time_accumulates_across_pairs(p2p):
+    """A process sending via several pairs records its TOTAL send time
+    (one tc per pair), not a single tc — the PR-2 under-recording fix."""
+    g, v = _one_p2p_psg([(0, 1), (0, 2)])
+    res = simulate(g, 3, lambda p, vid: 0.0, p2p=p2p)
+    tc = default_comm_time(v, 3, [0, 1])
+    t = res.ppg.times_matrix()
+    wait = res.ppg.perf.counter_matrix("wait_s", len(g.vertices))
+    assert t[0, v.vid] == 2 * tc                  # two sends
+    assert wait[0, v.vid] == 0.0
+    assert t[1, v.vid] == tc                      # first receive: no wait
+    # second receive: proc 0's clock already advanced one tc
+    assert t[2, v.vid] == 2 * tc
+    assert wait[2, v.vid] == tc
+
+
+@pytest.mark.parametrize("p2p", ["wavefront", "sequential"])
+def test_p2p_chain_within_vertex(p2p):
+    """Self-chain 0→1→2 in ONE vertex: proc 1 receives then sends, so its
+    time is (wait + tc) + tc and its clock advance matches its time."""
+    g, v = _one_p2p_psg([(0, 1), (1, 2)])
+    res = simulate(g, 3, lambda p, vid: 0.0, p2p=p2p)
+    tc = default_comm_time(v, 3, [0, 1])
+    t = res.ppg.times_matrix()
+    assert t[1, v.vid] == 2 * tc                  # receive tc + send tc
+    assert t[2, v.vid] == 2 * tc                  # waited tc, then tc
+    assert res.clocks[1] == t[1, v.vid]
+    assert res.ppg.perf.counter_matrix(
+        "comm_bytes", len(g.vertices))[1, v.vid] == 2 * v.comm_bytes
+
+
+def test_pairs_cache_sees_inplace_mutation():
+    """Regression: in-place element edits of p2p_pairs (same list object,
+    same length) must invalidate the cached pair array — wavefront and
+    sequential replay must keep agreeing after the edit."""
+    g, v = _one_p2p_psg([(0, 1), (2, 3)])
+    simulate(g, 4, lambda p, vid: 0.0, p2p="wavefront")   # warm the cache
+    v.p2p_pairs[1] = (1, 2)                               # now a chain
+    wave = simulate(g, 4, lambda p, vid: 0.0, p2p="wavefront")
+    seq = simulate(g, 4, lambda p, vid: 0.0, p2p="sequential")
+    _assert_same_sim(wave, seq, len(g.vertices))
+    tc = default_comm_time(v, 4, [0, 1])
+    assert wave.ppg.times_matrix()[1, v.vid] == 2 * tc    # receive + send
+
+
+def test_self_pair_is_handled():
+    g, v = _one_p2p_psg([(1, 1), (0, 1)])
+    for mode in ("wavefront", "sequential"):
+        res = simulate(g, 2, lambda p, vid: 0.0, p2p=mode)
+        tc = default_comm_time(v, 2, [0, 1])
+        # self pair: receive tc + send tc; then a real receive adds more
+        assert res.ppg.times_matrix()[1, v.vid] == pytest.approx(3 * tc)
+        assert res.clocks[1] == pytest.approx(2 * tc)
+
+
+# ---------------------------------------------------------------------------
+# one-pass multi-scale series
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(data=replay_psg(), seed=st.integers(0, 10**6))
+def test_series_matches_per_scale_simulate_bitwise(data, seed):
+    g, n_procs = data
+    scales = [2, 3, n_procs + 1]
+
+    def time_at(p, vid, n):
+        return 0.01 * ((p + vid) % 3 + 1) / n
+
+    series = simulate_series(g, scales, time_at, jitter=0.02, seed=seed)
+    for n in scales:
+        ref = simulate(g, n, lambda p, vid: time_at(p, vid, n),
+                       jitter=0.02, seed=seed + n)
+        assert np.array_equal(series[n].times_matrix(),
+                              ref.ppg.times_matrix())
+        assert series[n].meta["makespan"] == ref.ppg.meta["makespan"]
+
+
+def test_series_is_single_stacked_pass():
+    """The acceptance probe: over {512..8192} the vertex schedule is
+    walked ONCE — per scheduled vertex every scale advances before the
+    next vertex, instead of S sequential passes over the schedule."""
+    scales = (512, 1024, 2048, 4096, 8192)
+    g = PSG()
+    root = g.new_vertex("Root", "root")
+    g.root = root.vid
+    prev = None
+    for i in range(3):
+        v = g.new_vertex(COMP, f"c{i}", parent=root.vid)
+        g.add_edge(root.vid, v.vid, "control")
+        if prev is not None:
+            g.add_edge(prev, v.vid, "data")
+        prev = v.vid
+    ar = g.new_vertex(COMM, "psum", parent=root.vid)
+    ar.comm_kind, ar.comm_bytes = "all_reduce", 1e6
+    g.add_edge(prev, ar.vid, "data")
+    g.add_edge(root.vid, ar.vid, "control")
+
+    calls = []
+
+    @vectorized_base_times
+    def probe(procs, vid, n):
+        calls.append((vid, n, procs.size))
+        return 0.01
+
+    series = simulate_series(g, scales, probe)
+    assert sorted(series) == list(scales)
+    comp_sched = [vid for vid in schedule(g)
+                  if g.vertices[vid].kind != COMM]
+    # exactly one vectorized call per (scheduled comp vertex, scale) ...
+    assert len(calls) == len(scales) * len(comp_sched)
+    assert all(size == n for _, n, size in calls)
+    # ... grouped per vertex in schedule order: the stacked-pass signature
+    assert [vid for vid, _, _ in calls] == \
+        [vid for vid in comp_sched for _ in scales]
+    assert [n for _, n, _ in calls] == list(scales) * len(comp_sched)
+
+
+# ---------------------------------------------------------------------------
+# base_times channel: shim + seeding
+# ---------------------------------------------------------------------------
+
+def _comp_chain(n_comp=3):
+    g = PSG()
+    root = g.new_vertex("Root", "root")
+    g.root = root.vid
+    for i in range(n_comp):
+        v = g.new_vertex(COMP, f"c{i}", parent=root.vid)
+        g.add_edge(root.vid, v.vid, "control")
+    return g
+
+
+def test_scalar_branching_callable_falls_back_to_loop():
+    g = _comp_chain()
+    res = simulate(g, 4, lambda p, vid: 0.02 if p == 1 else 0.01)
+    t = res.ppg.times_matrix()
+    for vid in (1, 2, 3):
+        assert t[1, vid] == 0.02
+        assert t[0, vid] == t[2, vid] == t[3, vid] == 0.01
+
+
+def test_vectorized_callable_gets_proc_array_once_per_vertex():
+    g = _comp_chain()
+    shapes = []
+
+    @vectorized_base_times
+    def base(procs, vid):
+        shapes.append((vid, procs.shape))
+        return np.full(procs.shape, 0.01)
+
+    simulate(g, 4, base)
+    assert shapes == [(1, (4,)), (2, (4,)), (3, (4,))]
+
+
+def test_seeded_base_times_from_mapping_and_array():
+    g = _comp_chain(3)
+    table = {1: 0.1, 2: 0.2}                       # vid 3 unprofiled -> 0.0
+    for seed in (seeded_base_times(table, n_vertices=len(g.vertices)),
+                 seeded_base_times(np.array([0.0, 0.1, 0.2, 0.0]))):
+        res = simulate(g, 4, seed)
+        t = res.ppg.times_matrix()
+        assert np.array_equal(t[:, 1], np.full(4, 0.1))
+        assert np.array_equal(t[:, 2], np.full(4, 0.2))
+        assert np.array_equal(t[:, 3], np.zeros(4))
+
+
+# ---------------------------------------------------------------------------
+# PerfStore.set_entries
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(n_procs=st.integers(1, 10), seed=st.integers(0, 10**6),
+       n_ops=st.integers(1, 20))
+def test_set_entries_matches_scalar_set_entry(n_procs, seed, n_ops):
+    """Random batched scatters (duplicates, growth, accumulate on/off)
+    must be observationally identical to the per-entry loop."""
+    rng = np.random.default_rng(seed)
+    batched = PerfStore(n_procs, 3)
+    scalar = PerfStore(n_procs, 3)
+    names = ["wait_s", "flops"]
+    for _ in range(n_ops):
+        vid = int(rng.integers(8))                 # exercises column growth
+        k = int(rng.integers(1, 2 * n_procs + 1))
+        procs = rng.integers(0, n_procs, k)        # duplicates likely
+        times = rng.uniform(0.1, 1.0, k)
+        acc = bool(rng.integers(2))
+        counters = {nm: rng.uniform(0.1, 5.0, k)
+                    for nm in names if rng.uniform() < 0.7}
+        batched.set_entries(procs, vid, times, counters=counters,
+                            accumulate=acc)
+        for i, p in enumerate(procs.tolist()):
+            scalar.set_entry(p, vid, float(times[i]),
+                             counters={nm: float(v[i])
+                                       for nm, v in counters.items()},
+                             accumulate=acc)
+    assert len(batched) == len(scalar)
+    assert np.array_equal(batched.time_matrix(8), scalar.time_matrix(8))
+    assert np.array_equal(batched.samples[:, :8], scalar.samples[:, :8])
+    for nm in names:
+        assert np.array_equal(batched.counter_matrix(nm, 8),
+                              scalar.counter_matrix(nm, 8))
+    assert sorted(batched.keys()) == sorted(scalar.keys())
+
+
+def test_set_entries_accumulate_from_unset_and_broadcast():
+    s = PerfStore(4, 2)
+    s.set_entries([0, 2], 1, 0.5, counters={"wait_s": 0.1})  # broadcast
+    s.set_entries([2, 2], 1, [0.25, 0.25], accumulate=True,
+                  counters={"wait_s": [0.1, 0.2]})
+    assert s.time[0, 1] == 0.5
+    assert s.time[2, 1] == 1.0                     # 0.5 + 0.25 + 0.25
+    assert s.counter_at("wait_s", 2, 1) == pytest.approx(0.4)
+    assert (1, 1) not in s and len(s) == 2
+    s.set_entries(np.array([3]), 5, 2.0, accumulate=True)   # growth + unset
+    assert s.time_matrix(6)[3, 5] == 2.0
+
+
+def test_build_ppg_per_proc_dict_batched_path():
+    """{proc: {vid: vec}} assembly goes through set_entries grouping;
+    heterogeneous per-proc counter name sets must keep exact sparsity."""
+    g = _comp_chain(2)
+    perf = {0: {1: PerfVector(time=0.1, counters={"flops": 1.0})},
+            1: {1: PerfVector(time=0.2, time_var=0.01,
+                              counters={"flops": 2.0, "bytes": 3.0}),
+                2: PerfVector(time=0.3)},
+            3: {1: PerfVector(time=0.4)}}
+    ppg = build_ppg(g, 4, perf)
+    ref = PPG(g, 4)
+    for p, d in perf.items():
+        for vid, vec in d.items():
+            ref.set_perf(p, vid, vec)
+    assert np.array_equal(ppg.times_matrix(), ref.times_matrix())
+    assert np.array_equal(ppg.var_matrix(), ref.var_matrix())
+    for nm in ("flops", "bytes"):
+        assert np.array_equal(ppg.perf.counter_matrix(nm, 3),
+                              ref.perf.counter_matrix(nm, 3))
+    assert ppg.perf[(0, 1)].counters == {"flops": 1.0}
+    assert ppg.perf[(3, 1)].counters == {}
+    assert sorted(ppg.perf.keys()) == sorted(ref.perf.keys())
+
+
+# ---------------------------------------------------------------------------
+# SCALANA_DETECT_F32: f32 kernel variant (loosened parity)
+# ---------------------------------------------------------------------------
+
+def _amdahl_series(seed=0):
+    g = _comp_chain(6)
+    rng = np.random.default_rng(seed)
+    bad = set(rng.choice(6, 2, replace=False).tolist())
+
+    def time_at(p, vid, n):
+        if vid - 1 in bad:
+            return 1.0 * (0.6 + 0.4 / n)
+        return 1.0 / n
+
+    return simulate_series(g, [4, 8, 16, 32], time_at, jitter=0.01,
+                           seed=seed)
+
+
+def test_detect_f32_merge_close_to_f64(monkeypatch):
+    pytest.importorskip("jax")
+    from repro.core import detect_jax
+    rng = np.random.default_rng(7)
+    t = rng.uniform(0.05, 1.0, (8, 6))
+    t[rng.uniform(size=t.shape) < 0.2] = 0.0
+    var = rng.uniform(0.001, 0.1, t.shape)
+    ref64 = detect_jax.merge_matrix(t, "mean", var=var)
+    assert ref64.dtype == np.float64
+    monkeypatch.setenv("SCALANA_DETECT_F32", "1")
+    got32 = detect_jax.merge_matrix(t, "mean", var=var)
+    assert got32.dtype == np.float32
+    assert np.allclose(got32, ref64, rtol=1e-4, atol=1e-6)
+    assert np.allclose(got32, _merge_matrix(t, "mean"), rtol=1e-4,
+                       atol=1e-6)
+
+
+@pytest.mark.parametrize("strategy", ["mean", "max", "p0", "var"])
+def test_detect_f32_end_to_end_close_to_numpy(monkeypatch, strategy):
+    pytest.importorskip("jax")
+    series = _amdahl_series()
+    ref = detect_non_scalable(series, strategy=strategy, top_k=100,
+                              backend="numpy")
+    monkeypatch.setenv("SCALANA_DETECT_F32", "1")
+    got = detect_non_scalable(series, strategy=strategy, top_k=100,
+                              backend="jax")
+    assert [d.vid for d in got] == [d.vid for d in ref]
+    for x, y in zip(ref, got):
+        assert y.slope == pytest.approx(x.slope, rel=1e-4)
+        assert y.share == pytest.approx(x.share, rel=1e-4)
+        for scale, t in x.times.items():
+            assert y.times[scale] == pytest.approx(t, rel=1e-4)
