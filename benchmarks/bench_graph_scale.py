@@ -15,6 +15,14 @@ scale:
     top scale (the vectorized-replay acceptance criterion);
   * wall time for detection (numpy AND — in the full run, when jax is
     importable — the jitted backend, post-warmup) and backtracking;
+  * ``backtrack_s`` vs ``backtrack_batched_s`` — the frontier-batched
+    walk against the retained scalar reference on a many-straggler
+    scenario (>= 256 flagged (proc, vertex) pairs at the top scale); the
+    paths are asserted identical and the batched speedup is asserted
+    >= 5x at the top scale (the frontier-batching acceptance criterion);
+  * ``shard_merge_s`` — merging an 8-host sharded replay
+    (``simulate(..., shards=8)``) into one store through
+    ``PerfStore.from_shards``, asserted equal to the unsharded replay;
   * ``ppg.nbytes()`` and the comm-dependence share of it — collective
     dependence is stored as participant groups, so comm bytes grow O(P),
     not O(P²) (asserted);
@@ -37,8 +45,8 @@ from typing import Dict, List
 
 import numpy as np
 
-from repro.core import (COMM, COMP, PSG, backtrack, detect_abnormal,
-                        detect_non_scalable, root_causes)
+from repro.core import (COMM, COMP, PSG, PerfStore, backtrack,
+                        detect_abnormal, detect_non_scalable, root_causes)
 from repro.core.inject import simulate, simulate_series, vectorized_base_times
 
 FULL_SCALES = (512, 2048, 8192)
@@ -217,7 +225,52 @@ def run(smoke: bool = False) -> List[Dict]:
         t0 = time.perf_counter()
         paths = backtrack(top, ns, ab)
         rcs = root_causes(paths, psg, ppg=top)
+        pipeline_backtrack_s = time.perf_counter() - t0
+
+        # -- frontier-batched backtracking vs the scalar reference -------
+        # many distinct stragglers at a mid-chain comp vertex: hundreds of
+        # flagged (proc, vertex) pairs whose causal walks are long and
+        # disjoint — the regime Algorithm 1 faces at scale, where the
+        # scalar walk's per-step scanned-set copies go quadratic
+        comps = [v.vid for v in psg.vertices if v.kind == COMP]
+        mid = comps[len(comps) // 2]
+
+        @vectorized_base_times
+        def straggle(procs, vid):
+            t = np.full(procs.shape, 0.128 / n_procs)
+            if vid == mid:
+                sel = procs % 16 == 5
+                t[sel] += 0.05 * (1.0 + (procs[sel] % 7))
+            return t
+
+        res_bt = simulate(psg, n_procs, straggle)
+        ab_bt = detect_abnormal(res_bt.ppg, top_k=4096, backend="numpy")
+        t0 = time.perf_counter()
+        paths_scalar = backtrack(res_bt.ppg, [], ab_bt, mode="scalar")
         backtrack_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        paths_batched = backtrack(res_bt.ppg, [], ab_bt, mode="batched")
+        backtrack_batched_s = time.perf_counter() - t0
+        assert [(p.nodes, p.start_reason) for p in paths_scalar] == \
+            [(p.nodes, p.start_reason) for p in paths_batched], \
+            "batched and scalar backtracking disagree"
+        backtrack_speedup = backtrack_s / max(backtrack_batched_s, 1e-12)
+        if not smoke and n_procs == max(scales):
+            assert len(ab_bt) >= 256, \
+                f"backtrack scenario flagged only {len(ab_bt)} pairs"
+            assert backtrack_speedup >= 5.0, \
+                f"batched backtrack speedup {backtrack_speedup:.1f}x < 5x " \
+                f"at {n_procs} procs ({len(ab_bt)} flagged)"
+
+        # -- streamed shard merge ---------------------------------------
+        res_sh = simulate(psg, n_procs, straggle, shards=8)
+        t0 = time.perf_counter()
+        merged = PerfStore.from_shards(res_sh.shards, n_procs=n_procs)
+        shard_merge_s = time.perf_counter() - t0
+        V = len(psg.vertices)
+        assert np.array_equal(merged.time_matrix(V),
+                              res_bt.ppg.perf.time_matrix(V)), \
+            "shard-merged store differs from single-store replay"
 
         nbytes = top.nbytes()
         comm_nbytes = top.comm.nbytes()
@@ -244,7 +297,13 @@ def run(smoke: bool = False) -> List[Dict]:
             "detect_s": detect_s,
             "detect_backend": detect_backend,
             "detect_numpy_s": detect_np_s,
+            "pipeline_backtrack_s": pipeline_backtrack_s,
             "backtrack_s": backtrack_s,
+            "backtrack_batched_s": backtrack_batched_s,
+            "backtrack_speedup": backtrack_speedup,
+            "backtrack_flagged": len(ab_bt),
+            "shard_merge_s": shard_merge_s,
+            "shard_hosts": len(res_sh.shards),
             "ppg_bytes": nbytes,
             "comm_bytes": comm_nbytes,
             "clique_equiv_bytes": clique_nbytes,
@@ -255,13 +314,17 @@ def run(smoke: bool = False) -> List[Dict]:
         }
         rows.append(row)
         emit(row["name"],
-             (build_s + detect_s + backtrack_s) * 1e6,
+             (build_s + detect_s + pipeline_backtrack_s) * 1e6,
              f"simulate_s={simulate_s:.4f};simulate_seq_s="
              f"{simulate_seq_s:.4f};simulate_speedup="
              f"{simulate_speedup:.1f};simulate_series_s="
              f"{simulate_series_s:.3f};detect_s={detect_s:.4f};"
              f"detect_backend={detect_backend};detect_numpy_s="
              f"{detect_np_s:.4f};backtrack_s={backtrack_s:.3f};"
+             f"backtrack_batched_s={backtrack_batched_s:.4f};"
+             f"backtrack_speedup={backtrack_speedup:.1f};"
+             f"backtrack_flagged={len(ab_bt)};"
+             f"shard_merge_s={shard_merge_s:.4f};"
              f"ppg_bytes={nbytes};comm_bytes={comm_nbytes};"
              f"clique_equiv_bytes={clique_nbytes};"
              f"counter_bytes={counter_nbytes};"

@@ -14,7 +14,8 @@ from typing import TYPE_CHECKING
 # export name -> submodule that defines it
 _EXPORTS = {
     "Path": "backtrack", "backtrack": "backtrack",
-    "backtrack_one": "backtrack", "root_causes": "backtrack",
+    "backtrack_batched": "backtrack", "backtrack_one": "backtrack",
+    "backtrack_scalar": "backtrack", "root_causes": "backtrack",
     "CommLog": "commdep", "add_comm_edges": "commdep",
     "annotate_from_hlo": "commdep",
     "contract": "contraction",
@@ -31,6 +32,7 @@ _EXPORTS = {
     "simulate": "inject", "simulate_series": "inject",
     "p2p_rounds": "inject", "seeded_base_times": "inject",
     "vectorized_base_times": "inject",
+    "PerfShard": "shard", "ShardedStore": "shard", "shard_ranges": "shard",
     "build_ppg": "ppg",
     "GraphProfiler": "profiler",
     "build_psg": "psg",
@@ -56,7 +58,8 @@ def __dir__():
 
 
 if TYPE_CHECKING:                     # static analyzers see eager imports
-    from repro.core.backtrack import (Path, backtrack, backtrack_one,
+    from repro.core.backtrack import (Path, backtrack, backtrack_batched,
+                                      backtrack_one, backtrack_scalar,
                                       root_causes)
     from repro.core.commdep import CommLog, add_comm_edges, annotate_from_hlo
     from repro.core.contraction import contract
@@ -72,5 +75,6 @@ if TYPE_CHECKING:                     # static analyzers see eager imports
                                    simulate_series, vectorized_base_times)
     from repro.core.ppg import build_ppg
     from repro.core.profiler import GraphProfiler
+    from repro.core.shard import PerfShard, ShardedStore, shard_ranges
     from repro.core.psg import build_psg
     from repro.core.report import render_report

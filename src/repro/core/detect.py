@@ -309,33 +309,39 @@ def detect_abnormal(ppg: PPG, *, abnorm_thd: float = 1.3,
     step_time = float(t[:, top].sum(axis=1).max()) if top else 0.0
     step_time = step_time or 1e-12
 
+    # both backends produce the same <= top_k (vid, proc) winners, ranked
+    # by descending time-over-typical with stable vid-major ties, and only
+    # those materialize Python objects (a straggler can flag thousands of
+    # (proc, vertex) pairs; building objects for all of them dominated
+    # detection cost at 8k procs)
     jx = _resolve_backend(backend)
     if jx is not None:
-        flags, typical = jx.abnormal_arrays(t, abnorm_thd, min_share,
-                                            step_time)
+        # fused flags + device-side top-k: the (P, V) flag matrix and the
+        # ranking scores never round-trip to the host — only the winning
+        # indices transfer
+        vids, procs, typical, _ = jx.abnormal_topk(t, abnorm_thd, min_share,
+                                                   step_time, top_k)
+        picks = list(zip(vids.tolist(), procs.tolist()))
     else:
-        typical = np.median(t, axis=0)                 # (V,)
+        typical = np.median(t, axis=0)             # (V,)
         active = t.max(axis=0) > 0.0
         over = (typical > 0.0) & (t > abnorm_thd * typical) \
             & ((t - typical) / step_time >= min_share)
         dead_typical = (typical == 0.0) & (t / step_time >= min_share)
         flags = (over | dead_typical) & active
+        idx = np.argwhere(flags.T)                 # vid-major enumeration
+        picks = []
+        if idx.size:
+            score = t[idx[:, 1], idx[:, 0]] - typical[idx[:, 0]]
+            picks = [(int(idx[j, 0]), int(idx[j, 1]))
+                     for j in np.argsort(-score, kind="stable")[:top_k]]
 
     out: List[Abnormal] = []
-    # (vid, proc) enumeration order mirrors the scalar reference loop and
-    # the stable sort ranks ties identically — but only the top_k survivors
-    # materialize Python objects (a straggler can flag thousands of
-    # (proc, vertex) pairs; building objects for all of them dominated
-    # detection cost at 8k procs)
-    idx = np.argwhere(flags.T)
-    if idx.size:
-        tv = t[idx[:, 1], idx[:, 0]]
-        ty = typical[idx[:, 0]]
-        for j in np.argsort(-(tv - ty), kind="stable")[:top_k]:
-            vid, proc = int(idx[j, 0]), int(idx[j, 1])
-            v = psg.vertices[vid]
-            out.append(Abnormal(
-                vid=vid, proc=proc, time=float(tv[j]), typical=float(ty[j]),
-                ratio=float(tv[j] / ty[j]) if ty[j] > 0 else float("inf"),
-                kind=v.kind, name=v.name, source=v.source))
+    for vid, proc in picks:
+        v = psg.vertices[vid]
+        tv, ty = float(t[proc, vid]), float(typical[vid])
+        out.append(Abnormal(
+            vid=vid, proc=proc, time=tv, typical=ty,
+            ratio=tv / ty if ty > 0 else float("inf"),
+            kind=v.kind, name=v.name, source=v.source))
     return out

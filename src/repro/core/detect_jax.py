@@ -32,6 +32,7 @@ from __future__ import annotations
 
 import contextlib
 import os
+from functools import partial
 from typing import Optional, Sequence, Tuple
 
 import numpy as np
@@ -99,8 +100,7 @@ if HAS_JAX:
                    & (share >= min_share))
         return M, slope, share, flagged
 
-    @jax.jit
-    def _abnormal_kernel(t, typical, abnorm_thd, min_share, step_time):
+    def _abnormal_flags(t, typical, abnorm_thd, min_share, step_time):
         """(P, V) times + (V,) typical -> (P, V) flag mask.
 
         ``typical`` (the cross-process median) is computed on the host:
@@ -112,6 +112,27 @@ if HAS_JAX:
                 & ((t - typical) / step_time >= min_share))
         dead_typical = (typical == 0.0) & (t / step_time >= min_share)
         return (over | dead_typical) & active
+
+    @jax.jit
+    def _abnormal_kernel(t, typical, abnorm_thd, min_share, step_time):
+        return _abnormal_flags(t, typical, abnorm_thd, min_share, step_time)
+
+    @partial(jax.jit, static_argnums=(5,))
+    def _abnormal_topk_kernel(t, typical, abnorm_thd, min_share, step_time,
+                              k):
+        """Fused flags + device-side top-k selection.
+
+        The (P, V) flag matrix and the excess-over-typical scores never
+        leave the device: flagged entries are ranked by a stable
+        descending argsort over the vid-major flattening (matching the
+        numpy path's ``argwhere(flags.T)`` enumeration plus stable sort,
+        so ties rank identically) and only the best ``k`` flat indices,
+        their scores, and the flagged count are transferred."""
+        flags = _abnormal_flags(t, typical, abnorm_thd, min_share, step_time)
+        score = jnp.where(flags, t - typical, -jnp.inf)
+        flat = score.T.reshape(-1)                    # vid-major
+        order = jnp.argsort(-flat, stable=True)[:k]
+        return order, flat[order], flags.sum()
 
 
 def _precision():
@@ -167,7 +188,11 @@ def non_scalable_arrays(scales: Sequence[int], t: np.ndarray, var: np.ndarray,
 
 def abnormal_arrays(t: np.ndarray, abnorm_thd: float, min_share: float,
                     step_time: float) -> Tuple[np.ndarray, np.ndarray]:
-    """Run the abnormal kernel; returns ((P, V) flags, (V,) typical)."""
+    """Run the abnormal kernel; returns ((P, V) flags, (V,) typical).
+
+    Materializes the full flag matrix on the host — parity/test entry
+    point; detection itself uses :func:`abnormal_topk`, which keeps the
+    flags device-resident."""
     dtype, ctx = _precision()
     typical = np.median(np.asarray(t, dtype), axis=0)
     with ctx:
@@ -175,3 +200,27 @@ def abnormal_arrays(t: np.ndarray, abnorm_thd: float, min_share: float,
             jnp.asarray(np.asarray(t, dtype)), jnp.asarray(typical),
             float(abnorm_thd), float(min_share), float(step_time))
     return np.asarray(flags), typical
+
+
+def abnormal_topk(t: np.ndarray, abnorm_thd: float, min_share: float,
+                  step_time: float, k: int
+                  ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, int]:
+    """Device-resident abnormal detection: only the winners come home.
+
+    The (P, V) flag matrix and the ranking scores stay on the device
+    until report time; the host receives the (vid, proc) indices of the
+    ``<= k`` highest-scoring flagged entries (ranked exactly like the
+    numpy reference: descending ``time - typical``, ties in vid-major
+    enumeration order) plus the total flagged count.  Returns
+    ``(vids, procs, typical, n_flagged)``."""
+    dtype, ctx = _precision()
+    t_host = np.asarray(t, dtype)
+    typical = np.median(t_host, axis=0)
+    with ctx:
+        order, _, count = _abnormal_topk_kernel(
+            jnp.asarray(t_host), jnp.asarray(typical),
+            float(abnorm_thd), float(min_share), float(step_time), int(k))
+        n_flagged = int(count)                 # report time: flags leave
+        order = np.asarray(order[:min(int(k), n_flagged)])  # the device
+    n_procs = t_host.shape[0]
+    return order // n_procs, order % n_procs, typical, n_flagged

@@ -303,6 +303,18 @@ class CounterColumns:
         self.values = np.zeros((self.n_procs, 4))
         self.mask = np.zeros((self.n_procs, 4), bool)
 
+    def ensure_rows(self, n_procs: int) -> None:
+        """Grow the proc dimension exactly (streamed assembly adds hosts
+        late; ``n_procs`` stays the logical row count, so growth is exact,
+        one realloc per newly-seen host range)."""
+        if n_procs <= self.n_procs:
+            return
+        values = np.zeros((n_procs, self.values.shape[1]))
+        values[:self.n_procs] = self.values
+        mask = np.zeros((n_procs, self.mask.shape[1]), bool)
+        mask[:self.n_procs] = self.mask
+        self.values, self.mask, self.n_procs = values, mask, n_procs
+
     def slot(self, vid: int) -> int:
         """Slot of ``vid``, allocating (and growing by doubling) if new."""
         s = self.slot_of.get(vid)
@@ -384,6 +396,27 @@ class PerfStore:
         self._mask = self._grow(self._mask, cols)
         self._cols = cols
 
+    def ensure_rows(self, n_procs: int) -> None:
+        """Grow the proc dimension exactly to ``n_procs`` (streamed shard
+        assembly registers host ranges as they arrive).  ``n_procs`` is the
+        logical row count everywhere, so growth is exact — one realloc per
+        newly-seen host range, not doubling."""
+        if n_procs <= self.n_procs:
+            return
+
+        def grow_rows(arr: np.ndarray) -> np.ndarray:
+            out = np.zeros((n_procs, arr.shape[1]), arr.dtype)
+            out[:arr.shape[0]] = arr
+            return out
+
+        self.time = grow_rows(self.time)
+        self.time_var = grow_rows(self.time_var)
+        self.samples = grow_rows(self.samples)
+        self._mask = grow_rows(self._mask)
+        for cc in self._counters.values():
+            cc.ensure_rows(n_procs)
+        self.n_procs = int(n_procs)
+
     def _counter_cols(self, name: str) -> CounterColumns:
         cc = self._counters.get(name)
         if cc is None:
@@ -400,6 +433,28 @@ class PerfStore:
         out = np.zeros((self.n_procs, n_vertices))
         out[:, :self._cols] = self.time
         return out
+
+    def var_matrix(self, n_vertices: Optional[int] = None) -> np.ndarray:
+        """(n_procs, n_vertices) time-variance; unset entries are 0.0."""
+        if n_vertices is None or n_vertices == self._cols:
+            return self.time_var
+        if n_vertices <= self._cols:
+            return self.time_var[:, :n_vertices]
+        out = np.zeros((self.n_procs, n_vertices))
+        out[:, :self._cols] = self.time_var
+        return out
+
+    def time_column(self, vid: int) -> np.ndarray:
+        """(n_procs,) time at one vertex; zeros when the column is unset."""
+        if vid >= self._cols:
+            return np.zeros(self.n_procs)
+        return self.time[:, vid]
+
+    def time_at(self, p: int, vid: int) -> float:
+        """O(1) time read; 0.0 where unset (the ``get_time`` fast path)."""
+        if vid >= self._cols:
+            return 0.0
+        return float(self.time[p, vid])
 
     def counter_matrix(self, name: str,
                        n_vertices: Optional[int] = None) -> np.ndarray:
@@ -531,6 +586,83 @@ class PerfStore:
             else:
                 cc.values[p, s] = val
             cc.mask[p, s] = True
+
+    # -- shard merge (streamed multi-host assembly) --------------------
+    def merge_shard(self, shard: "PerfStore") -> None:
+        """Merge one per-host shard — a PerfStore whose rows map to global
+        processes ``proc_start + local`` (``proc_start`` defaults to 0; see
+        :class:`repro.core.shard.PerfShard`).
+
+        Every written (proc, vertex) entry lands through
+        :meth:`set_entries` — the one write seam — as one batched scatter
+        per (vertex, counter-signature) block, so shard-merged assembly is
+        bit-identical to writing the same entries into a single store
+        directly.  Rows/columns grow as shards arrive, which is what makes
+        :meth:`assemble_streamed` single-pass."""
+        off = int(getattr(shard, "proc_start", 0))
+        self.ensure_rows(off + shard.n_procs)
+        self.ensure_columns(shard._cols)
+        for vid in np.nonzero(shard._mask.any(axis=0))[0].tolist():
+            rows = np.nonzero(shard._mask[:, vid])[0]
+            named = [(name, cc, cc.slot_of[vid])
+                     for name, cc in shard._counters.items()
+                     if vid in cc.slot_of]
+            if named:
+                # rows sharing a counter signature (which counters are set
+                # at this vertex) land in one set_entries call each; within
+                # one shard the signature is almost always uniform
+                bits = np.stack([cc.mask[rows, s] for _, cc, s in named])
+                _, inv = np.unique(bits.T, axis=0, return_inverse=True)
+            else:
+                bits = np.zeros((0, rows.size), bool)
+                inv = np.zeros(rows.size, np.intp)
+            for gi in range(int(inv.max()) + 1):
+                sel = inv == gi
+                r = rows[sel]
+                sig = bits[:, sel][:, 0] if named else ()
+                counters = {name: cc.values[r, s]
+                            for (name, cc, s), on in zip(named, sig) if on}
+                self.set_entries(off + r, vid, shard.time[r, vid],
+                                 time_var=shard.time_var[r, vid],
+                                 samples=shard.samples[r, vid],
+                                 counters=counters)
+
+    @classmethod
+    def assemble_streamed(cls, shards: Iterable["PerfStore"], *,
+                          n_procs: int = 0, n_vertices: int = 0
+                          ) -> "PerfStore":
+        """Merge an iterable of per-host shards ONE AT A TIME.
+
+        The streamed form of :meth:`from_shards`: shards are consumed from
+        the iterator and merged immediately (block concatenation through
+        the :meth:`set_entries` seam), so a controller never holds more
+        than one shard plus the growing result — no single-controller
+        gather of all hosts.  ``n_procs`` / ``n_vertices`` pre-size the
+        result when known; otherwise both dimensions grow as host ranges
+        stream in."""
+        store = PerfStore(n_procs, n_vertices)
+        for shard in shards:
+            store.merge_shard(shard)
+        return store
+
+    @classmethod
+    def from_shards(cls, shards: Iterable["PerfStore"], *,
+                    n_procs: Optional[int] = None,
+                    n_vertices: Optional[int] = None) -> "PerfStore":
+        """Assemble one store from per-host shards by block concatenation.
+
+        Shards are PerfStore-like blocks with a ``proc_start`` row offset
+        (:class:`repro.core.shard.PerfShard`); ranges may be uneven, may
+        carry disjoint counter sets, and may overlap (later shards
+        overwrite, exactly like repeated ``set_entries`` calls)."""
+        shards = list(shards)
+        if n_procs is None:
+            n_procs = max((int(getattr(s, "proc_start", 0)) + s.n_procs
+                           for s in shards), default=0)
+        if n_vertices is None:
+            n_vertices = max((s._cols for s in shards), default=0)
+        return cls.assemble_streamed(shards, n_procs=n_procs,
+                                     n_vertices=n_vertices)
 
     # -- mapping API (back compat) -------------------------------------
     def __setitem__(self, key: Tuple[int, int], vec: PerfVector) -> None:
@@ -700,6 +832,17 @@ class CommIndex:
                     out.append((q, vid))
         return out
 
+    def p2p_preds_of(self, dst: Tuple[int, int]) -> List[Tuple[int, int]]:
+        """Explicit p2p reverse-edge sources of ``dst`` in registration
+        order (the internal list — treat as read-only).  The batched
+        backtracker's per-node gather; ``partners`` additionally resolves
+        collective group peers."""
+        self._materialize_p2p()
+        return self._p2p_preds.get(dst, [])
+
+    def has_groups(self, vid: int) -> bool:
+        return bool(self._groups.get(vid))
+
     def p2p_edges(self) -> Set[Tuple[Tuple[int, int], Tuple[int, int]]]:
         self._materialize_p2p()
         return self._p2p
@@ -774,29 +917,21 @@ class PPG:
         self.perf[(proc, vid)] = vec
 
     def get_time(self, proc: int, vid: int) -> float:
-        if vid >= self.perf._cols:
-            return 0.0
-        return float(self.perf.time[proc, vid])
+        return self.perf.time_at(proc, vid)
 
     def times_across_procs(self, vid: int) -> List[float]:
-        if vid >= self.perf._cols:
-            return [0.0] * self.n_procs
-        return self.perf.time[:, vid].tolist()
+        return self.perf.time_column(vid).tolist()
 
     def times_matrix(self) -> np.ndarray:
-        """(n_procs, n_vertices) time matrix — the detectors' input."""
+        """(n_procs, n_vertices) time matrix — the detectors' input.  For a
+        sharded perf store this is the stacked shard view (per-host blocks
+        concatenated, never scattered through a merged store)."""
         return self.perf.time_matrix(len(self.psg.vertices))
 
     def var_matrix(self) -> np.ndarray:
         """(n_procs, n_vertices) time-variance matrix (zero where unset) —
         input to the variance-weighted ("var") merge strategy."""
-        n = len(self.psg.vertices)
-        var = self.perf.time_var
-        if n <= var.shape[1]:
-            return var[:, :n]
-        out = np.zeros((self.n_procs, n))
-        out[:, :var.shape[1]] = var
-        return out
+        return self.perf.var_matrix(len(self.psg.vertices))
 
     def counter_matrix(self, name: str) -> np.ndarray:
         return self.perf.counter_matrix(name, len(self.psg.vertices))

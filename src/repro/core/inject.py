@@ -46,6 +46,7 @@ from repro.core.graph import (BRANCH, CALL, COMM, COMP, LOOP, PPG, PSG,
                               PerfStore, PerfVector, pairs_array,
                               vertex_pairs_array)
 from repro.core.ppg import build_ppg
+from repro.core.shard import ShardedStore, shard_ranges
 
 # default comm model constants (tunable; roughly ICI-like)
 LATENCY_S = 1e-6
@@ -98,6 +99,12 @@ class SimResult:
     @property
     def makespan(self) -> float:
         return max(self.clocks) if self.clocks else 0.0
+
+    @property
+    def shards(self):
+        """Per-host PerfShard blocks when the replay ran sharded
+        (``simulate(..., shards=...)``), else None."""
+        return getattr(self.ppg.perf, "shards", None)
 
 
 # ---------------------------------------------------------------------------
@@ -320,6 +327,8 @@ def _p2p_sequential(lane: _Lane, v, vid: int, tc: float) -> None:
 
 
 def _collective(lane: _Lane, v, vid: int, comm_time: Callable) -> None:
+    """Per-lane reference for :func:`_collective_stacked` (property-tested
+    bit-identical; the replay engine itself runs the stacked path)."""
     clocks = lane.clocks
     groups = v.meta.get("replica_groups") or [list(range(lane.n))]
     for g in groups:
@@ -335,14 +344,53 @@ def _collective(lane: _Lane, v, vid: int, comm_time: Callable) -> None:
         clocks[gi] = sync + tc
 
 
+def _collective_stacked(lanes: List[_Lane], clocks: np.ndarray, v, vid: int,
+                        comm_time: Callable) -> None:
+    """Advance EVERY scale through one collective leg together.
+
+    Per replica group, the synchronization point of all S scales is one
+    cross-scale masked max over the stacked (S, P_max) clock matrix —
+    previously one masked row reduction per scale.  Store writes and the
+    per-lane ``comm_time`` stay per scale (tc depends on the lane's clipped
+    group); results are bit-identical to :func:`_collective` per lane.
+    """
+    S, P_max = clocks.shape
+    groups = v.meta.get("replica_groups")
+    for g in (groups if groups else [None]):
+        member = np.zeros((S, P_max), bool)
+        gis: List[np.ndarray] = []
+        for si, lane in enumerate(lanes):
+            if g is None:
+                gi = np.arange(lane.n, dtype=np.intp)
+            else:
+                garr = np.asarray(g, np.intp)
+                gi = garr[garr < lane.n]          # keeps the group's order
+            gis.append(gi)
+            member[si, gi] = True
+        # ONE matrix op for all S scales (the former per-scale row max)
+        sync = np.where(member, clocks, -np.inf).max(axis=1, initial=-np.inf)
+        for si, lane in enumerate(lanes):
+            gi = gis[si]
+            if gi.size == 0:
+                continue
+            tc = comm_time(v, lane.n, gi.tolist())
+            wait = sync[si] - clocks[si, gi]
+            lane.store.set_column(vid, wait + tc, procs=gi,
+                                  counters={"wait_s": wait,
+                                            "comm_bytes": v.comm_bytes})
+            clocks[si, gi] = sync[si] + tc
+
+
 def _replay(psg: PSG, lanes: List[_Lane], clocks: np.ndarray,
             comm_time: Callable, jitter: float, p2p: str) -> List[int]:
     """Advance every lane through the vertex schedule in ONE pass.
 
     ``clocks`` is the stacked (S, P_max) clock matrix; ``lanes[si].clocks``
     is row ``si`` and entries ``>= lane.n`` are masked (never read or
-    written).  Comp legs advance the whole matrix in one add; comm legs
-    are one masked row operation per scale.
+    written).  Comp legs advance the whole matrix in one add; collective
+    legs synchronize all scales in one cross-scale masked max
+    (:func:`_collective_stacked`); only p2p legs stay per-scale (their
+    wavefront rounds depend on the lane's proc count).
     """
     if p2p not in P2P_MODES:
         raise ValueError(f"p2p mode must be one of {P2P_MODES}: {p2p!r}")
@@ -373,8 +421,7 @@ def _replay(psg: PSG, lanes: List[_Lane], clocks: np.ndarray,
                     else:
                         _p2p_wavefront(lane, v, vid, tc, rounds)
             else:
-                for lane in lanes:
-                    _collective(lane, v, vid, comm_time)
+                _collective_stacked(lanes, clocks, v, vid, comm_time)
             continue
         # Comp / atomic control: one stacked clock advance for all scales
         t_stack[:] = 0.0
@@ -393,10 +440,27 @@ def _replay(psg: PSG, lanes: List[_Lane], clocks: np.ndarray,
     return sched
 
 
+def _resolve_shards(shards, n_procs: int):
+    """``shards=`` argument -> list of (start, stop) host ranges or None."""
+    if shards is None:
+        return None
+    if isinstance(shards, (int, np.integer)):
+        return shard_ranges(n_procs, int(shards))
+    ranges = [(int(lo), int(hi)) for lo, hi in shards]
+    if not ranges or ranges[-1][1] != n_procs:
+        # the replay writes every process; a partial tiling would silently
+        # drop rows (ShardedStore checks contiguity-from-0, not the end)
+        raise ValueError(f"shard ranges must cover [0, {n_procs}): {ranges}")
+    return ranges
+
+
 def _make_lane(psg: PSG, n_procs: int, base_times: Callable, seed: int,
-               inject, clocks_row: np.ndarray) -> _Lane:
+               inject, clocks_row: np.ndarray, shards=None) -> _Lane:
+    ranges = _resolve_shards(shards, n_procs)
+    store = PerfStore(n_procs, len(psg.vertices)) if ranges is None else \
+        ShardedStore(ranges, len(psg.vertices))
     return _Lane(n=n_procs, base=_BaseTimes(base_times, n_procs),
-                 store=PerfStore(n_procs, len(psg.vertices)),
+                 store=store,
                  rng=np.random.default_rng(seed),
                  inj=_inject_by_vid(inject, n_procs),
                  clocks=clocks_row)
@@ -416,7 +480,8 @@ def simulate(psg: PSG, n_procs: int,
              comm_time: Callable = default_comm_time,
              jitter: float = 0.0,
              seed: int = 0,
-             p2p: str = "auto") -> SimResult:
+             p2p: str = "auto",
+             shards=None) -> SimResult:
     """Run the dependence simulation.
 
     ``base_times(procs_array, vid) -> per-process seconds`` for
@@ -427,6 +492,12 @@ def simulate(psg: PSG, n_procs: int,
     all three produce bit-identical results; "sequential" is the retained
     per-pair reference loop, "wavefront" replays disjoint rounds as
     batched gather/scatters, and "auto" picks per vertex.
+    ``shards``: multi-host replay — a host count or explicit (start, stop)
+    proc ranges.  Perf writes land in per-host
+    :class:`~repro.core.shard.PerfShard` blocks behind a
+    :class:`~repro.core.shard.ShardedStore` (the PPG keeps the sharded
+    store; ``result.shards`` exposes the blocks), bit-identical to the
+    unsharded store entry for entry.
 
     Perf data is written straight into a :class:`PerfStore` — whole
     (proc,)-columns for Comp/collective legs, batched
@@ -439,7 +510,8 @@ def simulate(psg: PSG, n_procs: int,
     """
     n_procs = int(n_procs)
     clocks = np.zeros((1, max(n_procs, 1)))
-    lane = _make_lane(psg, n_procs, base_times, seed, inject, clocks[0])
+    lane = _make_lane(psg, n_procs, base_times, seed, inject, clocks[0],
+                      shards=shards)
     sched = _replay(psg, [lane], clocks, comm_time, jitter, p2p)
     return SimResult(ppg=_finish(psg, lane),
                      clocks=lane.clocks[:n_procs].tolist(), sched=sched)

@@ -1,15 +1,19 @@
 """PPG assembly: per-process PSG replicas + perf vectors + comm edges."""
 from __future__ import annotations
 
-from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Union
+from collections.abc import Mapping as ABCMapping
+from typing import (Dict, Iterable, List, Mapping, Optional, Sequence, Tuple,
+                    Union)
 
 import numpy as np
 
 from repro.core.commdep import add_comm_edges
 from repro.core.graph import PPG, PSG, PerfStore, PerfVector
+from repro.core.shard import ShardedStore
 
 PerfByProc = Mapping[int, Mapping[int, PerfVector]]
-PerfInput = Union[Mapping[int, PerfVector], "PerfByProc", PerfStore]
+PerfInput = Union[Mapping[int, PerfVector], "PerfByProc", PerfStore,
+                  Iterable[PerfStore]]
 
 
 def _store_by_proc(store: PerfStore, perf: "PerfByProc") -> None:
@@ -42,16 +46,25 @@ def build_ppg(psg: PSG, n_procs: int, perf: Optional[PerfInput] = None,
               *, replicate: bool = True, meta: Optional[dict] = None) -> PPG:
     """Assemble a PPG.
 
-    ``perf`` is a ready :class:`PerfStore` (the simulator fast path), or
-    {vid: PerfVector} (replicated to all processes — the single-controller
-    measured channel), or {proc: {vid: PerfVector}} for per-process data
-    (per-shard timing).  Either way counters land in the store's
+    ``perf`` is a ready :class:`PerfStore` or
+    :class:`~repro.core.shard.ShardedStore` (the simulator fast paths —
+    a sharded store is kept AS the PPG's perf store, so detection reads
+    stacked shard views), or an iterable of per-host shards
+    (:class:`~repro.core.shard.PerfShard` blocks, consumed one at a time
+    through ``PerfStore.assemble_streamed`` — the streamed multi-host
+    channel), or {vid: PerfVector} (replicated to all processes — the
+    single-controller measured channel), or {proc: {vid: PerfVector}} for
+    per-process data.  Either way counters land in the store's
     column-sparse layout (one column block per counter, only at the
     vertices that carry it).
     """
     store: Optional[PerfStore] = None
-    if isinstance(perf, PerfStore):
+    if isinstance(perf, (PerfStore, ShardedStore)):
         store = perf
+    elif perf is not None and not isinstance(perf, ABCMapping):
+        # iterable of per-host shards: streamed block-concatenation merge
+        store = PerfStore.assemble_streamed(
+            perf, n_procs=n_procs, n_vertices=len(psg.vertices))
     ppg = PPG(psg=psg, n_procs=n_procs, perf=store, meta=dict(meta or {}))
     if perf and store is None:
         first = next(iter(perf.values()))

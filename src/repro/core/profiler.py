@@ -147,6 +147,26 @@ class GraphProfiler:
                                         counters=counters)
         return out
 
+    def perf_shard(self, proc_start: int = 0, n_procs: int = 1):
+        """This host's measured profile as a proc-range shard.
+
+        Returns a :class:`~repro.core.shard.PerfShard` covering global
+        processes ``[proc_start, proc_start + n_procs)``, each local row
+        filled with this profiler's per-vertex vectors (an SPMD host runs
+        identical top-level structure on its local processes).  Hosts
+        profile independently and the controller merges blocks late:
+        ``PerfStore.from_shards(shards)`` or streamed
+        ``build_ppg(psg, P, shards)`` — no single-controller gather of
+        per-(proc, vertex) vectors.
+        """
+        from repro.core.shard import PerfShard
+        shard = PerfShard(proc_start, n_procs, len(self.psg.vertices))
+        procs = np.arange(int(n_procs))
+        for vid, vec in self.perf_vectors().items():
+            shard.set_entries(procs, vid, vec.time, time_var=vec.time_var,
+                              samples=vec.samples, counters=vec.counters)
+        return shard
+
     def base_times(self, default: float = 0.0) -> Callable:
         """Vectorized ``base_times`` seeded from the measured profile.
 

@@ -22,7 +22,13 @@ def _fmt_node(psg: PSG, node) -> str:
 
 def render_report(ppg: PPG, non_scalable: Sequence[NonScalable],
                   abnormal: Sequence[Abnormal], paths: Sequence[Path],
-                  *, title: str = "ScalAna scaling-loss report") -> str:
+                  *, title: str = "ScalAna scaling-loss report",
+                  max_abnormal: int = 10) -> str:
+    """Text report of the full diagnosis.
+
+    ``max_abnormal`` caps the abnormal-vertex listing; when more were
+    flagged, the listing ends with an explicit "… and N more" line
+    instead of truncating silently."""
     psg = ppg.psg
     lines: List[str] = [title, "=" * len(title), ""]
 
@@ -42,11 +48,13 @@ def render_report(ppg: PPG, non_scalable: Sequence[NonScalable],
     lines.append("## Abnormal vertices (AbnormThd exceeded)")
     if not abnormal:
         lines.append("  (none)")
-    for a in abnormal[:10]:
+    for a in abnormal[:max_abnormal]:
         lines.append(
             f"  - v{a.vid} p{a.proc} {a.kind}:{a.name} "
             f"t={1e3 * a.time:.3f}ms typical={1e3 * a.typical:.3f}ms "
             f"x{a.ratio:.2f} {a.source}")
+    if len(abnormal) > max_abnormal:
+        lines.append(f"  … and {len(abnormal) - max_abnormal} more")
     lines.append("")
 
     lines.append("## Backtracking root-cause paths")

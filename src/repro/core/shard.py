@@ -1,0 +1,295 @@
+"""Sharded performance-data layer: per-host PerfStore blocks.
+
+The PPG's perf data no longer has to be assembled by a single controller:
+each host records its own proc-range block (:class:`PerfShard` — a
+:class:`~repro.core.graph.PerfStore` whose rows are local processes offset
+by ``proc_start``), and the blocks merge late, either
+
+* into one global store — ``PerfStore.from_shards(shards)`` /
+  ``PerfStore.assemble_streamed(shards)`` concatenate the blocks through
+  the ``set_entries`` write seam, bit-identical to single-store assembly —
+  or
+* not at all — :class:`ShardedStore` keeps the per-host blocks and serves
+  the PerfStore API on top: writes route to the owning shard by proc
+  range, matrix reads are STACKED VIEWS (per-shard blocks concatenated on
+  demand), so the detectors consume multi-host data without ever
+  densifying it into a merged store.
+
+``repro.core.inject.simulate(..., shards=...)`` executes the replay engine
+straight into a ShardedStore (multi-host replay), and
+``GraphProfiler.perf_shard`` emits a measured per-host block; both feed
+``build_ppg`` unchanged.
+"""
+from __future__ import annotations
+
+from typing import (Any, Dict, Iterator, List, Mapping, Optional, Sequence,
+                    Tuple)
+
+import numpy as np
+
+from repro.core.graph import PerfStore, PerfVector
+
+
+def shard_ranges(n_procs: int, n_hosts: int) -> List[Tuple[int, int]]:
+    """Split ``[0, n_procs)`` into ``n_hosts`` contiguous (start, stop)
+    ranges, as even as possible (first ranges take the remainder)."""
+    n_procs, n_hosts = int(n_procs), int(n_hosts)
+    if n_hosts <= 0:
+        raise ValueError(f"n_hosts must be positive: {n_hosts}")
+    n_hosts = min(n_hosts, max(n_procs, 1))
+    base, rem = divmod(n_procs, n_hosts)
+    out, lo = [], 0
+    for h in range(n_hosts):
+        hi = lo + base + (1 if h < rem else 0)
+        out.append((lo, hi))
+        lo = hi
+    return out
+
+
+class PerfShard(PerfStore):
+    """One host's proc-range block of a PerfStore.
+
+    Rows are LOCAL processes; row ``i`` is global process
+    ``proc_start + i``.  Everything else — dense time/var/sample matrices,
+    column-sparse counters, the ``set_entries`` seam — is the plain
+    :class:`PerfStore` layout, so a shard is just a store that knows where
+    its rows land in the global proc space.
+    """
+
+    __slots__ = ("proc_start",)
+
+    def __init__(self, proc_start: int, n_procs: int, n_vertices: int = 0):
+        super().__init__(n_procs, n_vertices)
+        self.proc_start = int(proc_start)
+
+    @property
+    def proc_stop(self) -> int:
+        return self.proc_start + self.n_procs
+
+    def to_local(self, procs) -> np.ndarray:
+        """Global proc indices -> this shard's local row indices."""
+        return np.asarray(procs, np.intp) - self.proc_start
+
+    def __repr__(self) -> str:
+        return (f"PerfShard([{self.proc_start}, {self.proc_stop}), "
+                f"{len(self)} entries)")
+
+
+class ShardedStore:
+    """Per-host :class:`PerfShard` blocks behind the PerfStore API.
+
+    Writes (``set_column`` / ``set_entries`` / ``set_entry``) route each
+    proc index to the shard owning its range — a row's writes keep their
+    order, so accumulate-mode scatters are bit-identical to the unsharded
+    store.  Matrix reads (``time_matrix`` / ``var_matrix`` /
+    ``counter_columns``) are stacked shard views: per-host blocks
+    concatenated on demand, never scattered into a merged store.  Use
+    :meth:`merge` when a genuinely single store is needed.
+
+    Ranges must tile ``[0, n_procs)`` contiguously (the replay engine
+    writes every process).
+    """
+
+    __slots__ = ("shards", "n_procs", "_starts")
+
+    def __init__(self, ranges: Sequence[Tuple[int, int]], n_vertices: int = 0):
+        ranges = [(int(lo), int(hi)) for lo, hi in ranges]
+        if not ranges:
+            raise ValueError("ShardedStore needs at least one range")
+        lo0 = 0
+        for lo, hi in ranges:
+            if lo != lo0 or hi <= lo:
+                raise ValueError(f"ranges must tile [0, P) contiguously: "
+                                 f"{ranges}")
+            lo0 = hi
+        self.shards: List[PerfShard] = [PerfShard(lo, hi - lo, n_vertices)
+                                        for lo, hi in ranges]
+        self.n_procs = ranges[-1][1]
+        self._starts = np.asarray([lo for lo, _ in ranges], np.intp)
+
+    # -- routing -------------------------------------------------------
+    def shard_of(self, proc: int) -> PerfShard:
+        """The shard owning global process ``proc``."""
+        i = int(np.searchsorted(self._starts, proc, side="right")) - 1
+        return self.shards[i]
+
+    def _route(self, procs: np.ndarray) -> Iterator[Tuple[PerfShard,
+                                                          np.ndarray]]:
+        """Yield (shard, selector) for each shard with rows in ``procs``;
+        selectors preserve the original order of a row's occurrences."""
+        sidx = np.searchsorted(self._starts, procs, side="right") - 1
+        for i in np.unique(sidx).tolist():
+            yield self.shards[i], sidx == i
+
+    # -- write API (the replay engine's surface) -----------------------
+    def ensure_columns(self, n_vertices: int) -> None:
+        for sh in self.shards:
+            sh.ensure_columns(n_vertices)
+
+    def set_column(self, vid: int, time, *, time_var=0.0, samples=1,
+                   counters: Optional[Mapping[str, Any]] = None,
+                   procs: Optional[np.ndarray] = None) -> None:
+        if procs is not None:
+            procs = np.asarray(procs, np.intp)
+            if procs.size == 0:
+                return
+            for sh, sel in self._route(procs):
+                local = procs[sel] - sh.proc_start
+                sh.set_column(vid, _take(time, sel), procs=local,
+                              time_var=_take(time_var, sel),
+                              samples=_take(samples, sel),
+                              counters={k: _take(v, sel)
+                                        for k, v in (counters or {}).items()})
+            return
+        for sh in self.shards:
+            blk = slice(sh.proc_start, sh.proc_stop)
+            sh.set_column(vid, _slice(time, blk),
+                          time_var=_slice(time_var, blk),
+                          samples=_slice(samples, blk),
+                          counters={k: _slice(v, blk)
+                                    for k, v in (counters or {}).items()})
+
+    def set_entries(self, procs, vid: int, time, *, time_var=0.0, samples=1,
+                    counters: Optional[Mapping[str, Any]] = None,
+                    accumulate: bool = False) -> None:
+        procs = np.asarray(procs, np.intp)
+        if procs.size == 0:
+            return
+        t = np.broadcast_to(np.asarray(time, float), procs.shape)
+        tv = np.broadcast_to(np.asarray(time_var), procs.shape)
+        sm = np.broadcast_to(np.asarray(samples), procs.shape)
+        cs = {k: np.broadcast_to(np.asarray(v, float), procs.shape)
+              for k, v in (counters or {}).items()}
+        for sh, sel in self._route(procs):
+            sh.set_entries(procs[sel] - sh.proc_start, vid, t[sel],
+                           time_var=tv[sel], samples=sm[sel],
+                           counters={k: v[sel] for k, v in cs.items()},
+                           accumulate=accumulate)
+
+    def set_entry(self, p: int, vid: int, time: float, *, time_var=0.0,
+                  samples=1, counters: Optional[Mapping[str, float]] = None,
+                  accumulate: bool = False) -> None:
+        sh = self.shard_of(p)
+        sh.set_entry(p - sh.proc_start, vid, time, time_var=time_var,
+                     samples=samples, counters=counters,
+                     accumulate=accumulate)
+
+    def __setitem__(self, key: Tuple[int, int], vec: PerfVector) -> None:
+        p, vid = key
+        sh = self.shard_of(p)
+        sh[(p - sh.proc_start, vid)] = vec
+
+    # -- stacked read views --------------------------------------------
+    @property
+    def _cols(self) -> int:
+        return max(sh._cols for sh in self.shards)
+
+    def time_matrix(self, n_vertices: Optional[int] = None) -> np.ndarray:
+        n = self._cols if n_vertices is None else n_vertices
+        return np.vstack([sh.time_matrix(n) for sh in self.shards])
+
+    def var_matrix(self, n_vertices: Optional[int] = None) -> np.ndarray:
+        n = self._cols if n_vertices is None else n_vertices
+        return np.vstack([sh.var_matrix(n) for sh in self.shards])
+
+    def counter_matrix(self, name: str,
+                       n_vertices: Optional[int] = None) -> np.ndarray:
+        n = self._cols if n_vertices is None else n_vertices
+        return np.vstack([sh.counter_matrix(name, n) for sh in self.shards])
+
+    def counter_columns(self, name: str
+                        ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Stacked compressed view: the union of the shards' written
+        columns, each shard's block placed at its row range."""
+        per = [sh.counter_columns(name) for sh in self.shards]
+        vids = np.unique(np.concatenate([v for v, _, _ in per]))
+        values = np.zeros((self.n_procs, vids.size))
+        mask = np.zeros((self.n_procs, vids.size), bool)
+        for sh, (v, val, m) in zip(self.shards, per):
+            if not v.size:
+                continue
+            slots = np.searchsorted(vids, v)
+            values[sh.proc_start:sh.proc_stop, slots] = val
+            mask[sh.proc_start:sh.proc_stop, slots] = m
+        return vids, values, mask
+
+    def time_column(self, vid: int) -> np.ndarray:
+        return np.concatenate([sh.time_column(vid) for sh in self.shards])
+
+    def time_at(self, p: int, vid: int) -> float:
+        sh = self.shard_of(p)
+        return sh.time_at(p - sh.proc_start, vid)
+
+    def counter_at(self, name: str, p: int, vid: int,
+                   default: float = 0.0) -> float:
+        sh = self.shard_of(p)
+        return sh.counter_at(name, p - sh.proc_start, vid, default)
+
+    def counter_names(self) -> List[str]:
+        seen: Dict[str, None] = {}
+        for sh in self.shards:
+            for name in sh.counter_names():
+                seen.setdefault(name)
+        return list(seen)
+
+    # -- mapping API (back compat) -------------------------------------
+    def __getitem__(self, key: Tuple[int, int]) -> PerfVector:
+        p, vid = key
+        sh = self.shard_of(p)
+        return sh[(p - sh.proc_start, vid)]
+
+    def get(self, key: Tuple[int, int],
+            default: Optional[PerfVector] = None) -> Optional[PerfVector]:
+        try:
+            return self[key]
+        except (KeyError, IndexError):
+            return default
+
+    def __contains__(self, key: Tuple[int, int]) -> bool:
+        p, vid = key
+        sh = self.shard_of(p)
+        return (p - sh.proc_start, vid) in sh
+
+    def __len__(self) -> int:
+        return sum(len(sh) for sh in self.shards)
+
+    def keys(self) -> Iterator[Tuple[int, int]]:
+        for sh in self.shards:
+            for p, vid in sh.keys():
+                yield (p + sh.proc_start, vid)
+
+    __iter__ = keys
+
+    def values(self) -> Iterator[PerfVector]:
+        for key in self.keys():
+            yield self[key]
+
+    def items(self) -> Iterator[Tuple[Tuple[int, int], PerfVector]]:
+        for key in self.keys():
+            yield key, self[key]
+
+    # -- storage / merge -----------------------------------------------
+    def counter_nbytes(self) -> int:
+        return sum(sh.counter_nbytes() for sh in self.shards)
+
+    def counter_dense_nbytes(self) -> int:
+        return sum(sh.counter_dense_nbytes() for sh in self.shards)
+
+    def nbytes(self) -> int:
+        return sum(sh.nbytes() for sh in self.shards)
+
+    def merge(self) -> PerfStore:
+        """Concatenate the blocks into one global PerfStore (the
+        ``from_shards`` seam)."""
+        return PerfStore.from_shards(self.shards, n_procs=self.n_procs)
+
+
+def _take(val, sel: np.ndarray):
+    """Index broadcastable-or-scalar ``val`` by a boolean selector."""
+    arr = np.asarray(val)
+    return arr[sel] if arr.ndim else val
+
+
+def _slice(val, blk: slice):
+    arr = np.asarray(val)
+    return arr[blk] if arr.ndim else val

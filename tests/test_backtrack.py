@@ -1,9 +1,11 @@
 """Backtracking root-cause detection (Algorithm 1): the paper's core."""
+import numpy as np
 import pytest
 
 from repro.core import (COMM, COMP, PSG, backtrack, build_ppg,
                         detect_abnormal, detect_non_scalable, root_causes)
-from repro.core.backtrack import WAIT_COUNTER, backtrack_one
+from repro.core.backtrack import (WAIT_COUNTER, backtrack_batched,
+                                  backtrack_one, backtrack_scalar)
 from repro.core.graph import PerfVector
 from repro.core.inject import simulate, simulate_series
 
@@ -97,6 +99,105 @@ def test_backtrack_terminates_and_covers_all_abnormal():
         assert (a.proc, a.vid) in scanned
     for p in paths:
         assert len(p.nodes) <= 256            # termination bound
+
+
+def _paths_key(paths):
+    return [(p.nodes, p.start_reason) for p in paths]
+
+
+def _random_psg(rng, n_procs):
+    """Random PSG mixing comp chains, p2p rings, global and grouped
+    collectives, loops and diamond data edges."""
+    g = PSG()
+    root = g.new_vertex("Root", "root")
+    g.root = root.vid
+    prev = None
+    for i in range(int(rng.integers(4, 12))):
+        r = rng.random()
+        if r < 0.35:
+            v = g.new_vertex(COMP, f"c{i}", parent=root.vid)
+        elif r < 0.5 and prev is not None:
+            lp = g.new_vertex("Loop", f"loop{i}", parent=root.vid)
+            g.add_edge(root.vid, lp.vid, "control")
+            b0 = g.new_vertex(COMP, f"b{i}a", parent=lp.vid)
+            b1 = g.new_vertex(COMP, f"b{i}b", parent=lp.vid)
+            g.add_edge(b0.vid, b1.vid, "data")
+            g.add_edge(prev, lp.vid, "data")
+            prev = lp.vid
+            continue
+        elif r < 0.75:
+            v = g.new_vertex(COMM, f"pp{i}", parent=root.vid)
+            v.comm_kind, v.comm_bytes = "ppermute", 1e5
+            off = int(rng.integers(1, max(n_procs, 2)))
+            v.p2p_pairs = [(p, (p + off) % n_procs) for p in range(n_procs)]
+        else:
+            v = g.new_vertex(COMM, f"ar{i}", parent=root.vid)
+            v.comm_kind, v.comm_bytes = "all_reduce", 1e6
+            gs = int(rng.choice([2, 4, n_procs]))
+            if gs < n_procs:
+                v.meta["replica_groups"] = [
+                    list(range(a, min(a + gs, n_procs)))
+                    for a in range(0, n_procs, gs)]
+        g.add_edge(root.vid, v.vid, "control")
+        if prev is not None:
+            g.add_edge(prev, v.vid, "data")
+        if prev is not None and v.vid >= 3 and rng.random() < 0.3:
+            g.add_edge(max(1, v.vid - 2), v.vid, "data")   # diamond
+        prev = v.vid
+    return g
+
+
+def test_batched_equals_scalar_on_random_ppgs():
+    """The frontier-batched walk returns EXACTLY the scalar reference's
+    paths — overlapping starts, ties (jitter-free waits), grouped and
+    global collectives, p2p chains, loops and diamonds included."""
+    rng = np.random.default_rng(42)
+    for trial in range(40):
+        n_procs = int(rng.integers(4, 28))
+        g = _random_psg(rng, n_procs)
+        inj = {}
+        for _ in range(int(rng.integers(1, 7))):
+            inj[(int(rng.integers(0, n_procs)),
+                 int(rng.integers(1, len(g.vertices))))] = \
+                float(rng.uniform(0.05, 0.5))
+        # every other trial jitter-free: exact ties stress the stable
+        # first-min/first-max ordering
+        res = simulate(g, n_procs, lambda p, vid: 0.01, inject=inj,
+                       jitter=0.1 if trial % 2 else 0.0, seed=trial)
+        ab = detect_abnormal(res.ppg, top_k=500)
+        series = simulate_series(g, [max(n_procs // 2, 2), n_procs],
+                                 lambda p, vid, n: 0.02 * (0.5 + 0.5 / n),
+                                 seed=trial)
+        ns = detect_non_scalable(series, min_share=0.0, top_k=20)
+        assert _paths_key(backtrack_batched(res.ppg, ns, ab)) == \
+            _paths_key(backtrack_scalar(res.ppg, ns, ab)), trial
+
+
+def test_batched_equals_scalar_overlapping_straggler_block():
+    """Many starts flagged at the SAME vertices: the acceptance pass must
+    reproduce the sequential scanned-set pruning exactly."""
+    rng = np.random.default_rng(7)
+    for trial in range(10):
+        n_procs = 12
+        g = _random_psg(rng, n_procs)
+        vid = int(rng.integers(1, len(g.vertices)))
+        inj = {(p, vid): 0.3 for p in range(0, n_procs, 2)}
+        res = simulate(g, n_procs, lambda p, vid_: 0.01, inject=inj,
+                       seed=trial)
+        ab = detect_abnormal(res.ppg, top_k=500)
+        assert _paths_key(backtrack_batched(res.ppg, [], ab)) == \
+            _paths_key(backtrack_scalar(res.ppg, [], ab)), trial
+
+
+def test_backtrack_mode_dispatch():
+    g, (c0, c1, p2p, c2, ar) = _pipeline_psg()
+    res = simulate(g, 8, lambda p, vid: 0.01, inject={(4, c0): 0.5})
+    ab = detect_abnormal(res.ppg)
+    keys = {mode: _paths_key(backtrack(res.ppg, [], ab, mode=mode))
+            for mode in ("auto", "batched", "scalar")}
+    assert keys["auto"] == keys["batched"] == keys["scalar"]
+    with pytest.raises(ValueError):
+        backtrack(res.ppg, [], ab, mode="nope")
 
 
 def test_non_scalable_plus_backtrack_end_to_end():
