@@ -32,7 +32,8 @@ _EXPORTS = {
     "simulate": "inject", "simulate_series": "inject",
     "p2p_rounds": "inject", "seeded_base_times": "inject",
     "vectorized_base_times": "inject",
-    "PerfShard": "shard", "ShardedStore": "shard", "shard_ranges": "shard",
+    "DeviceShardView": "shard", "PerfShard": "shard",
+    "ShardedStore": "shard", "shard_ranges": "shard",
     "build_ppg": "ppg",
     "GraphProfiler": "profiler",
     "build_psg": "psg",
@@ -75,6 +76,7 @@ if TYPE_CHECKING:                     # static analyzers see eager imports
                                    simulate_series, vectorized_base_times)
     from repro.core.ppg import build_ppg
     from repro.core.profiler import GraphProfiler
-    from repro.core.shard import PerfShard, ShardedStore, shard_ranges
+    from repro.core.shard import (DeviceShardView, PerfShard, ShardedStore,
+                                  shard_ranges)
     from repro.core.psg import build_psg
     from repro.core.report import render_report

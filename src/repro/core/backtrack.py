@@ -65,6 +65,27 @@ class Path:
         return iter(self.nodes)
 
 
+class _SeenUnion:
+    """Non-copying membership view over (scanned, own-path) node sets.
+
+    ``backtrack_one`` used to rebuild ``scanned | set(path)`` on every
+    step — an O(|scanned| + |path|) copy per node that goes quadratic
+    when hundreds of conflicting paths fall back to the scalar walk over
+    a large scanned set.  The walk only ever asks ``node in visited``, so
+    a chained-membership wrapper over the two live sets (the path set
+    updated incrementally on append) is semantically identical and O(1)
+    per probe."""
+
+    __slots__ = ("scanned", "path")
+
+    def __init__(self, scanned: Set[Node], path: Set[Node]):
+        self.scanned = scanned
+        self.path = path
+
+    def __contains__(self, node) -> bool:
+        return node in self.scanned or node in self.path
+
+
 def _wait_of(ppg: PPG, node: Node) -> float:
     return ppg.perf.counter_at(WAIT_COUNTER, *node)
 
@@ -79,7 +100,7 @@ def _is_p2p(psg: PSG, vid: int) -> bool:
     return v.kind == COMM and bool(v.p2p_pairs)
 
 
-def _data_pred(ppg: PPG, node: Node, visited: Set[Node]) -> Optional[Node]:
+def _data_pred(ppg: PPG, node: Node, visited) -> Optional[Node]:
     proc, vid = node
     preds = ppg.psg.preds(vid, "data")
     cands = [(proc, p) for p in preds if (proc, p) not in visited]
@@ -88,7 +109,7 @@ def _data_pred(ppg: PPG, node: Node, visited: Set[Node]) -> Optional[Node]:
     return max(cands, key=lambda n: ppg.get_time(*n))
 
 
-def _control_end(ppg: PPG, node: Node, visited: Set[Node]) -> Optional[Node]:
+def _control_end(ppg: PPG, node: Node, visited) -> Optional[Node]:
     """Continue from the end (last child) of a Loop/Branch structure."""
     proc, vid = node
     kids = ppg.psg.children(vid)
@@ -98,7 +119,7 @@ def _control_end(ppg: PPG, node: Node, visited: Set[Node]) -> Optional[Node]:
     return None
 
 
-def _comm_partner(ppg: PPG, node: Node, visited: Set[Node]) -> Optional[Node]:
+def _comm_partner(ppg: PPG, node: Node, visited) -> Optional[Node]:
     partners = [p for p in ppg.comm_partners(*node) if p not in visited]
     if not partners:
         return None
@@ -120,6 +141,10 @@ def backtrack_one(ppg: PPG, start: Node, *, reason: str,
                   scanned: Set[Node], max_len: int = 256) -> Path:
     psg = ppg.psg
     path: List[Node] = []
+    path_set: Set[Node] = set()
+    # visited == scanned | set(path) at every step, without the per-step
+    # union copy (quadratic over many conflicting scalar-fallback paths)
+    visited = _SeenUnion(scanned, path_set)
     v: Optional[Node] = start
     first = True
     while v is not None and len(path) < max_len:
@@ -131,8 +156,8 @@ def backtrack_one(ppg: PPG, start: Node, *, reason: str,
             path.append(v)                  # terminal collective
             break
         path.append(v)
+        path_set.add(v)
         nxt: Optional[Node] = None
-        visited = scanned | set(path)
         if _is_collective(psg, vid):        # collective start vertex
             late = _latest_participant(ppg, v)
             if late is not None and late not in visited:

@@ -40,6 +40,7 @@ from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.graph import COMM, COMP, LOOP, PPG
+from repro.core.shard import ShardedStore
 
 MERGE_STRATEGIES = ("mean", "median", "max", "p0", "cluster", "var")
 
@@ -233,7 +234,11 @@ def detect_non_scalable(series: Mapping[int, PPG], *,
 
     ``backend``: "numpy" (host), "jax" (fused jitted kernel), or None/"auto"
     (jax iff already imported).  Strategies outside ``JIT_STRATEGIES`` run
-    on numpy regardless."""
+    on numpy regardless.  On the jax backend, a series whose reference
+    (largest) scale is backed by a :class:`~repro.core.shard.ShardedStore`
+    is fed from device-resident shard buffers (each PPG's cached
+    ``device_view()``; only dirty rows re-upload) — the stacked host
+    matrix is never materialized."""
     scales = sorted(series)
     if not scales:
         return []
@@ -241,44 +246,63 @@ def detect_non_scalable(series: Mapping[int, PPG], *,
     psg = ref.psg
     V = len(psg.vertices)
     top = psg.children(psg.root)
-    t_ref = ref.times_matrix()
-    total_max = float(np.sum(t_ref[:, top].max(axis=0, initial=0.0))) \
-        if top else 0.0                       # initial: safe at n_procs == 0
-    total_max = total_max or 1e-12
 
     S = len(scales)
     present = np.zeros((S, V), bool)         # vertex exists at that scale
     jx = _resolve_backend(backend) if strategy in JIT_STRATEGIES else None
-    if jx is not None:
-        # stacked (S, Pmax, V) layout: scales with fewer processes are
-        # padded with dead (0.0) readings, which every merge ignores
-        p_max = max(series[p].n_procs for p in scales)
-        T = np.zeros((S, p_max, V))
-        VAR = np.zeros((S, p_max, V))
+    if jx is not None and isinstance(ref.perf, ShardedStore):
+        # device-fed: each scale's per-host blocks feed the kernels from
+        # its cached DeviceShardView (dirty rows re-upload, nothing
+        # else); neither the stacked (S, Pmax, V) tensor nor the sharded
+        # reference's (P, V) matrix is ever assembled on the host, and
+        # the total step time reduces blockwise on the device
         for si, p in enumerate(scales):
-            ppg = series[p]
-            vp = min(len(ppg.psg.vertices), V)
+            vp = min(len(series[p].psg.vertices), V)
             if vp:
-                T[si, :ppg.n_procs, :vp] = ppg.times_matrix()[:, :vp]
-                VAR[si, :ppg.n_procs, :vp] = ppg.var_matrix()[:, :vp]
                 present[si, :vp] = True
-        M, slope, share, flagged = jx.non_scalable_arrays(
-            scales, T, VAR, present, total_max, ideal_slope, slope_margin,
+        views = [series[p].device_view() for p in scales]
+        M, slope, share, flagged = jx.non_scalable_views(
+            scales, views, V, present, top, ideal_slope, slope_margin,
             min_share, strategy)
     else:
-        M = np.zeros((S, V))                 # merged time per (scale, vertex)
-        for si, p in enumerate(scales):
-            ppg = series[p]
-            vp = min(len(ppg.psg.vertices), V)
-            if vp:
-                var = ppg.var_matrix()[:, :vp] if strategy == "var" else None
-                M[si, :vp] = _merge_matrix(ppg.times_matrix()[:, :vp],
-                                           strategy, var=var)
-                present[si, :vp] = True
-        slope = _fit_slopes(scales, M, (M > 0.0) & present)
-        share = M[-1] / total_max
-        flagged = (M.sum(axis=0) > 0.0) \
-            & (slope - ideal_slope > slope_margin) & (share >= min_share)
+        t_ref = ref.times_matrix()
+        # share guards against total_max <= 0 (an all-dead final scale)
+        # in every backend: share is 0 there, flagging nothing, instead
+        # of the inf/nan garbage an unguarded divide produced
+        total_max = float(np.sum(t_ref[:, top].max(axis=0, initial=0.0))) \
+            if top else 0.0                   # initial: safe at n_procs == 0
+        if jx is not None:
+            # stacked (S, Pmax, V) layout: scales with fewer processes are
+            # padded with dead (0.0) readings, which every merge ignores
+            p_max = max(series[p].n_procs for p in scales)
+            T = np.zeros((S, p_max, V))
+            VAR = np.zeros((S, p_max, V))
+            for si, p in enumerate(scales):
+                ppg = series[p]
+                vp = min(len(ppg.psg.vertices), V)
+                if vp:
+                    T[si, :ppg.n_procs, :vp] = ppg.times_matrix()[:, :vp]
+                    VAR[si, :ppg.n_procs, :vp] = ppg.var_matrix()[:, :vp]
+                    present[si, :vp] = True
+            M, slope, share, flagged = jx.non_scalable_arrays(
+                scales, T, VAR, present, total_max, ideal_slope,
+                slope_margin, min_share, strategy)
+        else:
+            M = np.zeros((S, V))             # merged time per (scale, vertex)
+            for si, p in enumerate(scales):
+                ppg = series[p]
+                vp = min(len(ppg.psg.vertices), V)
+                if vp:
+                    var = ppg.var_matrix()[:, :vp] if strategy == "var" \
+                        else None
+                    M[si, :vp] = _merge_matrix(ppg.times_matrix()[:, :vp],
+                                               strategy, var=var)
+                    present[si, :vp] = True
+            slope = _fit_slopes(scales, M, (M > 0.0) & present)
+            share = np.divide(M[-1], total_max, out=np.zeros(V),
+                              where=total_max > 0)
+            flagged = (M.sum(axis=0) > 0.0) \
+                & (slope - ideal_slope > slope_margin) & (share >= min_share)
 
     deviation = slope - ideal_slope
     out: List[NonScalable] = []
@@ -300,14 +324,14 @@ def detect_abnormal(ppg: PPG, *, abnorm_thd: float = 1.3,
                     backend: Optional[str] = None) -> List[Abnormal]:
     """Per-process outliers at one scale (AbnormThd x cross-process median).
 
-    ``backend`` as in :func:`detect_non_scalable`."""
+    ``backend`` as in :func:`detect_non_scalable`.  On the jax backend, a
+    :class:`~repro.core.shard.ShardedStore`-backed PPG runs entirely from
+    device-resident shard buffers (incremental dirty-row upload; median,
+    flags, and top-k device-side) — the online-detection fast path."""
     psg = ppg.psg
     if not len(psg.vertices) or not ppg.n_procs:
         return []
-    t = ppg.times_matrix()                             # (P, V)
     top = psg.children(psg.root)
-    step_time = float(t[:, top].sum(axis=1).max()) if top else 0.0
-    step_time = step_time or 1e-12
 
     # both backends produce the same <= top_k (vid, proc) winners, ranked
     # by descending time-over-typical with stable vid-major ties, and only
@@ -315,31 +339,44 @@ def detect_abnormal(ppg: PPG, *, abnorm_thd: float = 1.3,
     # (proc, vertex) pairs; building objects for all of them dominated
     # detection cost at 8k procs)
     jx = _resolve_backend(backend)
-    if jx is not None:
-        # fused flags + device-side top-k: the (P, V) flag matrix and the
-        # ranking scores never round-trip to the host — only the winning
-        # indices transfer
-        vids, procs, typical, _ = jx.abnormal_topk(t, abnorm_thd, min_share,
-                                                   step_time, top_k)
+    if jx is not None and isinstance(ppg.perf, ShardedStore):
+        # device-fed: the per-host blocks live on the device (dirty rows
+        # re-upload per call), concatenate there, and the step time,
+        # median, flagging and ranking all run device-side — the stacked
+        # (P, V) host matrix is never materialized
+        vids, procs, typical, _ = jx.abnormal_topk_view(
+            ppg.device_view(), len(psg.vertices), top, abnorm_thd,
+            min_share, top_k)
         picks = list(zip(vids.tolist(), procs.tolist()))
     else:
-        typical = np.median(t, axis=0)             # (V,)
-        active = t.max(axis=0) > 0.0
-        over = (typical > 0.0) & (t > abnorm_thd * typical) \
-            & ((t - typical) / step_time >= min_share)
-        dead_typical = (typical == 0.0) & (t / step_time >= min_share)
-        flags = (over | dead_typical) & active
-        idx = np.argwhere(flags.T)                 # vid-major enumeration
-        picks = []
-        if idx.size:
-            score = t[idx[:, 1], idx[:, 0]] - typical[idx[:, 0]]
-            picks = [(int(idx[j, 0]), int(idx[j, 1]))
-                     for j in np.argsort(-score, kind="stable")[:top_k]]
+        t = ppg.times_matrix()                         # (P, V)
+        step_time = float(t[:, top].sum(axis=1).max()) if top else 0.0
+        step_time = step_time or 1e-12
+        if jx is not None:
+            # fused flags + device-side top-k: the (P, V) flag matrix and
+            # the ranking scores never round-trip to the host — only the
+            # winning indices transfer
+            vids, procs, typical, _ = jx.abnormal_topk(
+                t, abnorm_thd, min_share, step_time, top_k)
+            picks = list(zip(vids.tolist(), procs.tolist()))
+        else:
+            typical = np.median(t, axis=0)             # (V,)
+            active = t.max(axis=0) > 0.0
+            over = (typical > 0.0) & (t > abnorm_thd * typical) \
+                & ((t - typical) / step_time >= min_share)
+            dead_typical = (typical == 0.0) & (t / step_time >= min_share)
+            flags = (over | dead_typical) & active
+            idx = np.argwhere(flags.T)                 # vid-major
+            picks = []
+            if idx.size:
+                score = t[idx[:, 1], idx[:, 0]] - typical[idx[:, 0]]
+                picks = [(int(idx[j, 0]), int(idx[j, 1]))
+                         for j in np.argsort(-score, kind="stable")[:top_k]]
 
     out: List[Abnormal] = []
     for vid, proc in picks:
         v = psg.vertices[vid]
-        tv, ty = float(t[proc, vid]), float(typical[vid])
+        tv, ty = float(ppg.get_time(proc, vid)), float(typical[vid])
         out.append(Abnormal(
             vid=vid, proc=proc, time=tv, typical=ty,
             ratio=tv / ty if ty > 0 else float("inf"),

@@ -11,9 +11,20 @@ host.  Three kernels cover the pipeline:
   stack, so switching strategies costs an index, not a recompile.
 * ``_non_scalable_kernel`` — the merge stack + batched least-squares
   log-log slopes + share/deviation flagging, fused under one ``jax.jit``.
-* ``_abnormal_kernel`` — AbnormThd thresholding against the cross-process
-  median (the median itself — an order statistic — is computed on the
-  host, where numpy's introselect beats XLA's CPU sort).
+* ``_abnormal_topk_kernel`` — cross-process median (``jnp.median``,
+  bit-identical to numpy's in f64) + AbnormThd thresholding + stable
+  top-k, all device-side; only the winners and the (V,) typical
+  transfer.  (``_abnormal_kernel`` keeps the host-median parity entry.)
+
+A second kernel family consumes per-host DEVICE blocks instead of one
+host-stacked matrix (:class:`~repro.core.shard.DeviceShardView` inputs —
+the online path, where only dirty rows re-upload per call):
+``_merge_blocks_kernel`` computes each scale's merge column as
+block-level reductions, ``_slope_flag_from_M_kernel`` derives the total
+step time from the merged stack itself, and
+``_abnormal_topk_blocks_kernel`` concatenates blocks on the device.
+``non_scalable_views`` / ``abnormal_topk_view`` are their entry points;
+the stacked (P, V) matrix exists on neither host nor wire.
 
 All kernels run in float64 (``jax.experimental.enable_x64`` — thread-local,
 so the rest of the process keeps jax's float32 default) and match the
@@ -72,16 +83,14 @@ if HAS_JAX:
     def _merge_all_kernel(t, var):
         return _merge_all(t, var)
 
-    @jax.jit
-    def _non_scalable_kernel(t, var, logp, present, total_max,
-                             ideal_slope, slope_margin, min_share):
-        """Fused detect math: merge stack + slope fit + flagging.
+    def _slope_share_flag(M, logp, present, total_max,
+                          ideal_slope, slope_margin, min_share):
+        """(4, S, V) merged stack -> (slope, share, flagged), each (4, V).
 
-        t, var: (S, P, V) stacked per-scale matrices (P padded to the max
-        scale; padding rows are dead readings).  logp: (S,) log process
-        counts.  present: (S, V) vertex-exists-at-scale mask.  Returns
-        (M_all (4, S, V), slope (4, V), share (4, V), flagged (4, V))."""
-        M = _merge_all(t, var)                             # (4, S, V)
+        The back half of the detect math, shared by the stacked host-fed
+        kernel and the device-block path.  ``share`` is guarded: an
+        all-dead final scale (``total_max <= 0``) yields share 0 — and so
+        flags nothing — instead of inf/nan garbage."""
         valid = (M > 0.0) & present[None]
         x = logp[None, :, None]                            # (1, S, 1)
         Y = jnp.where(valid, jnp.log(jnp.where(valid, M, 1.0)), 0.0)
@@ -94,11 +103,71 @@ if HAS_JAX:
         num = n * Sxy - Sx * Sy
         slope = jnp.where((denom != 0) & (n >= 2),
                           num / jnp.where(denom != 0, denom, 1.0), 0.0)
-        share = M[:, -1, :] / total_max
+        share = jnp.where(total_max > 0.0,
+                          M[:, -1, :] / jnp.where(total_max > 0.0,
+                                                  total_max, 1.0), 0.0)
         flagged = ((M.sum(axis=1) > 0.0)
                    & (slope - ideal_slope > slope_margin)
                    & (share >= min_share))
+        return slope, share, flagged
+
+    @jax.jit
+    def _non_scalable_kernel(t, var, logp, present, total_max,
+                             ideal_slope, slope_margin, min_share):
+        """Fused detect math: merge stack + slope fit + flagging.
+
+        t, var: (S, P, V) stacked per-scale matrices (P padded to the max
+        scale; padding rows are dead readings).  logp: (S,) log process
+        counts.  present: (S, V) vertex-exists-at-scale mask.  Returns
+        (M_all (4, S, V), slope (4, V), share (4, V), flagged (4, V))."""
+        M = _merge_all(t, var)                             # (4, S, V)
+        slope, share, flagged = _slope_share_flag(
+            M, logp, present, total_max, ideal_slope, slope_margin,
+            min_share)
         return M, slope, share, flagged
+
+    # -- device-block kernels (DeviceShardView inputs) ------------------
+    @jax.jit
+    def _merge_blocks_kernel(ts, vs):
+        """One scale's per-host blocks -> its (4, V) merged column.
+
+        ``ts`` / ``vs`` are tuples of (n_local, V) device blocks (row
+        order = global proc order).  Every merge is an associative
+        block-level reduction: counts/sums/weighted sums add across
+        blocks, maxima combine by max, and "p0" reads row 0 of block 0 —
+        so the stacked host matrix never exists, on either side of the
+        transfer."""
+        pos = [t > 0.0 for t in ts]
+        cnt = sum(p.sum(axis=0) for p in pos)              # (V,)
+        total = sum(jnp.where(p, t, 0.0).sum(axis=0)
+                    for p, t in zip(pos, ts))
+        mx_raw = jnp.stack([t.max(axis=0) for t in ts]).max(axis=0)
+        w = [jnp.where(p, 1.0 / (v + VAR_EPS), 0.0)
+             for p, v in zip(pos, vs)]
+        wsum = sum(wi.sum(axis=0) for wi in w)
+        wt = sum((wi * t).sum(axis=0) for wi, t in zip(w, ts))
+        any_pos = cnt > 0
+        mean = jnp.where(any_pos, total / jnp.maximum(cnt, 1), 0.0)
+        mx = jnp.where(any_pos, mx_raw, 0.0)
+        p0 = ts[0][0, :]
+        p0 = jnp.where(p0 > 0.0, p0, mean)
+        varm = jnp.where(wsum > 0,
+                         wt / jnp.where(wsum > 0, wsum, 1.0), 0.0)
+        return jnp.stack([mean, mx, p0, varm])             # (4, V)
+
+    @jax.jit
+    def _slope_flag_from_M_kernel(M, logp, present, top_idx,
+                                  ideal_slope, slope_margin, min_share):
+        """Slope/share/flag over a device-merged (4, S, V) stack.
+
+        The reference scale's total step time is the "max"-merge row at
+        the last scale summed over the root's children — exactly the
+        host's per-column ``max(initial=0.0)`` sum, since the merge
+        already clamps all-dead columns to 0 — so no extra reduction
+        over the raw blocks is needed."""
+        total_max = M[JIT_STRATEGIES.index("max"), -1, top_idx].sum()
+        return _slope_share_flag(M, logp, present, total_max,
+                                 ideal_slope, slope_margin, min_share)
 
     def _abnormal_flags(t, typical, abnorm_thd, min_share, step_time):
         """(P, V) times + (V,) typical -> (P, V) flag mask.
@@ -117,22 +186,42 @@ if HAS_JAX:
     def _abnormal_kernel(t, typical, abnorm_thd, min_share, step_time):
         return _abnormal_flags(t, typical, abnorm_thd, min_share, step_time)
 
-    @partial(jax.jit, static_argnums=(5,))
-    def _abnormal_topk_kernel(t, typical, abnorm_thd, min_share, step_time,
-                              k):
-        """Fused flags + device-side top-k selection.
+    def _median_flags_topk(t, abnorm_thd, min_share, step_time, k):
+        """Fused median + flags + device-side top-k selection — the one
+        ranking implementation both the host-fed and the device-block
+        kernels trace, so they cannot diverge.
 
-        The (P, V) flag matrix and the excess-over-typical scores never
-        leave the device: flagged entries are ranked by a stable
-        descending argsort over the vid-major flattening (matching the
-        numpy path's ``argwhere(flags.T)`` enumeration plus stable sort,
-        so ties rank identically) and only the best ``k`` flat indices,
-        their scores, and the flagged count are transferred."""
+        The cross-process median (``typical``), the (P, V) flag matrix
+        and the excess-over-typical scores never leave the device:
+        flagged entries are ranked by a stable descending argsort over
+        the vid-major flattening (matching the numpy path's
+        ``argwhere(flags.T)`` enumeration plus stable sort, so ties rank
+        identically) and only the best ``k`` flat indices, their scores,
+        the flagged count, and the (V,) typical vector are transferred."""
+        typical = jnp.median(t, axis=0)
         flags = _abnormal_flags(t, typical, abnorm_thd, min_share, step_time)
         score = jnp.where(flags, t - typical, -jnp.inf)
         flat = score.T.reshape(-1)                    # vid-major
         order = jnp.argsort(-flat, stable=True)[:k]
-        return order, flat[order], flags.sum()
+        return order, flat[order], flags.sum(), typical
+
+    @partial(jax.jit, static_argnums=(4,))
+    def _abnormal_topk_kernel(t, abnorm_thd, min_share, step_time, k):
+        return _median_flags_topk(t, abnorm_thd, min_share, step_time, k)
+
+    @partial(jax.jit, static_argnums=(4,))
+    def _abnormal_topk_blocks_kernel(ts, top_idx, abnorm_thd, min_share, k):
+        """Device-block abnormal detection, end to end on the device.
+
+        ``ts``: tuple of (n_local, V) device blocks in global proc order.
+        The blocks concatenate ON THE DEVICE (the host never stacks
+        them); the step time, the cross-process median, the flag matrix
+        and the ranking all happen there, and only <= k winners + the
+        (V,) typical come home."""
+        t = jnp.concatenate(ts, axis=0)               # device-side (P, V)
+        step_time = t[:, top_idx].sum(axis=1).max()
+        step_time = jnp.where(step_time > 0.0, step_time, 1e-12)
+        return _median_flags_topk(t, abnorm_thd, min_share, step_time, k)
 
 
 def _precision():
@@ -207,20 +296,82 @@ def abnormal_topk(t: np.ndarray, abnorm_thd: float, min_share: float,
                   ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, int]:
     """Device-resident abnormal detection: only the winners come home.
 
-    The (P, V) flag matrix and the ranking scores stay on the device
-    until report time; the host receives the (vid, proc) indices of the
-    ``<= k`` highest-scoring flagged entries (ranked exactly like the
-    numpy reference: descending ``time - typical``, ties in vid-major
-    enumeration order) plus the total flagged count.  Returns
-    ``(vids, procs, typical, n_flagged)``."""
+    The cross-process median (``jnp.median`` — bit-identical to numpy's
+    in f64; the order statistic no longer round-trips ``t`` through the
+    host), the (P, V) flag matrix and the ranking scores stay on the
+    device until report time; the host receives the (vid, proc) indices
+    of the ``<= k`` highest-scoring flagged entries (ranked exactly like
+    the numpy reference: descending ``time - typical``, ties in
+    vid-major enumeration order), the (V,) typical vector, and the total
+    flagged count.  Returns ``(vids, procs, typical, n_flagged)``."""
     dtype, ctx = _precision()
     t_host = np.asarray(t, dtype)
-    typical = np.median(t_host, axis=0)
     with ctx:
-        order, _, count = _abnormal_topk_kernel(
-            jnp.asarray(t_host), jnp.asarray(typical),
+        order, _, count, typical = _abnormal_topk_kernel(
+            jnp.asarray(t_host),
             float(abnorm_thd), float(min_share), float(step_time), int(k))
         n_flagged = int(count)                 # report time: flags leave
         order = np.asarray(order[:min(int(k), n_flagged)])  # the device
+        typical = np.asarray(typical)
     n_procs = t_host.shape[0]
     return order // n_procs, order % n_procs, typical, n_flagged
+
+
+def abnormal_topk_view(view, n_vertices: int, top: Sequence[int],
+                       abnorm_thd: float, min_share: float, k: int
+                       ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, int]:
+    """Abnormal detection fed straight from a
+    :class:`~repro.core.shard.DeviceShardView` — the online entry point.
+
+    ``view.refresh`` uploads only the rows written since the last call
+    (O(dirty rows), not O(P·V)); the per-host blocks then concatenate on
+    the device, where the step time, median, flagging and top-k ranking
+    all run.  The host never materializes the stacked (P, V) matrix.
+    ``top`` is the root's child vids (the step-time columns).  Returns
+    ``(vids, procs, typical, n_flagged)`` like :func:`abnormal_topk`."""
+    dtype, ctx = _precision()
+    with ctx:
+        view.refresh(n_vertices, dtype)
+        ts = tuple(view.time_blocks())
+        order, _, count, typical = _abnormal_topk_blocks_kernel(
+            ts, jnp.asarray(np.asarray(top, np.int32)),
+            float(abnorm_thd), float(min_share), int(k))
+        n_flagged = int(count)
+        order = np.asarray(order[:min(int(k), n_flagged)])
+        typical = np.asarray(typical)
+    n_procs = view.n_procs
+    return order // n_procs, order % n_procs, typical, n_flagged
+
+
+def non_scalable_views(scales: Sequence[int], views: Sequence,
+                       n_vertices: int, present: np.ndarray,
+                       top: Sequence[int], ideal_slope: float,
+                       slope_margin: float, min_share: float, strategy: str
+                       ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                                  np.ndarray]:
+    """Non-scalable detection fed from per-scale
+    :class:`~repro.core.shard.DeviceShardView`\\ s.
+
+    Each scale's per-host blocks are merged blockwise on the device
+    (:func:`_merge_blocks_kernel` — block-level reductions, no stacked
+    (S, P, V) matrix on either side) and the merged (4, S, V) stack
+    feeds the slope/share/flag kernel, which derives the reference
+    scale's total step time from its own "max" row.  Returns the
+    ``strategy`` row of (M (S, V), slope (V,), share (V,), flagged (V,))
+    as host arrays — O(S·V), never O(P·V)."""
+    si = JIT_STRATEGIES.index(strategy)
+    dtype, ctx = _precision()
+    logp = np.log(np.asarray(scales, dtype))
+    with ctx:
+        for view in views:
+            view.refresh(n_vertices, dtype)
+        M = jnp.stack(
+            [_merge_blocks_kernel(tuple(v.time_blocks()),
+                                  tuple(v.var_blocks())) for v in views],
+            axis=1)                                        # (4, S, V)
+        slope, share, flagged = _slope_flag_from_M_kernel(
+            M, jnp.asarray(logp), jnp.asarray(present),
+            jnp.asarray(np.asarray(top, np.int32)),
+            float(ideal_slope), float(slope_margin), float(min_share))
+        return (np.asarray(M)[si], np.asarray(slope)[si],
+                np.asarray(share)[si], np.asarray(flagged)[si])

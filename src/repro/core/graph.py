@@ -367,7 +367,7 @@ class PerfStore:
     """
 
     __slots__ = ("n_procs", "_cols", "time", "time_var", "samples",
-                 "_mask", "_counters", "_count")
+                 "_mask", "_counters", "_count", "_dirty")
 
     def __init__(self, n_procs: int, n_vertices: int = 0):
         self.n_procs = int(n_procs)
@@ -379,6 +379,9 @@ class PerfStore:
         self._mask = np.zeros(shape, bool)
         self._counters: Dict[str, CounterColumns] = {}
         self._count = 0
+        # rows written since the last clear_dirty() — the device-resident
+        # buffer layer (shard.DeviceShardView) re-uploads only these
+        self._dirty = np.zeros(self.n_procs, bool)
 
     # -- storage management --------------------------------------------
     def _grow(self, arr: np.ndarray, cols: int) -> np.ndarray:
@@ -413,9 +416,21 @@ class PerfStore:
         self.time_var = grow_rows(self.time_var)
         self.samples = grow_rows(self.samples)
         self._mask = grow_rows(self._mask)
+        dirty = np.zeros(n_procs, bool)
+        dirty[:self._dirty.size] = self._dirty
+        self._dirty = dirty
         for cc in self._counters.values():
             cc.ensure_rows(n_procs)
         self.n_procs = int(n_procs)
+
+    # -- dirty-row tracking (device-resident buffer feed) --------------
+    def dirty_rows(self) -> np.ndarray:
+        """Row indices written since the last :meth:`clear_dirty` — what an
+        incremental device upload must re-transfer."""
+        return np.nonzero(self._dirty)[0]
+
+    def clear_dirty(self) -> None:
+        self._dirty[:] = False
 
     def _counter_cols(self, name: str) -> CounterColumns:
         cc = self._counters.get(name)
@@ -492,6 +507,7 @@ class PerfStore:
         newly = np.count_nonzero(~self._mask[idx, vid])
         self._count += int(newly)
         self._mask[idx, vid] = True
+        self._dirty[idx] = True
         self.time[idx, vid] = time
         self.time_var[idx, vid] = time_var
         self.samples[idx, vid] = samples
@@ -528,6 +544,7 @@ class PerfStore:
         col_mask = self._mask[:, vid]
         self._count += int(np.count_nonzero(touched & ~col_mask))
         col_mask |= touched
+        self._dirty |= touched
         t = np.broadcast_to(np.asarray(time, float), procs.shape)
         if not accumulate:
             self.time[procs, vid] = t
@@ -572,6 +589,7 @@ class PerfStore:
         if not self._mask[p, vid]:
             self._count += 1
             self._mask[p, vid] = True
+        self._dirty[p] = True
         if accumulate:
             self.time[p, vid] += time
         else:
@@ -593,15 +611,54 @@ class PerfStore:
         processes ``proc_start + local`` (``proc_start`` defaults to 0; see
         :class:`repro.core.shard.PerfShard`).
 
-        Every written (proc, vertex) entry lands through
-        :meth:`set_entries` — the one write seam — as one batched scatter
-        per (vertex, counter-signature) block, so shard-merged assembly is
-        bit-identical to writing the same entries into a single store
-        directly.  Rows/columns grow as shards arrive, which is what makes
-        :meth:`assemble_streamed` single-pass."""
+        When the shard's contiguous row block ``[proc_start, proc_stop)``
+        is still untouched in this store (the streamed-assembly common
+        case: each host range lands once), the whole block copies in with
+        ONE masked assignment per matrix plus one scatter per counter —
+        identical entries to the grouped path, without the
+        per-(vertex, counter-signature) ``set_entries`` loop.  Overlapping
+        or revisited ranges fall back to :meth:`_merge_shard_grouped`, the
+        retained per-signature reference, so last-writer-wins semantics
+        are unchanged."""
         off = int(getattr(shard, "proc_start", 0))
         self.ensure_rows(off + shard.n_procs)
         self.ensure_columns(shard._cols)
+        rows = slice(off, off + shard.n_procs)
+        if not self._mask[rows].any():
+            self._merge_shard_block(shard, off)
+        else:
+            self._merge_shard_grouped(shard, off)
+
+    def _merge_shard_block(self, shard: "PerfStore", off: int) -> None:
+        """Whole-block masked copy of one shard into untouched target rows
+        — bit-identical to the grouped path (same assignments, no
+        accumulation is involved because the rows carry no prior entries).
+        """
+        rows = slice(off, off + shard.n_procs)
+        cols = shard._cols
+        msk = shard._mask
+        np.copyto(self.time[rows, :cols], shard.time, where=msk)
+        np.copyto(self.time_var[rows, :cols], shard.time_var, where=msk)
+        np.copyto(self.samples[rows, :cols], shard.samples, where=msk)
+        self._mask[rows, :cols] |= msk
+        self._count += int(np.count_nonzero(msk))
+        self._dirty[rows] |= msk.any(axis=1)
+        for name, scc in shard._counters.items():
+            svids, svals, smask = scc.columns()
+            if not svids.size:
+                continue
+            cc = self._counter_cols(name)
+            slots = np.asarray([cc.slot(v) for v in svids.tolist()], np.intp)
+            r, c = np.nonzero(smask)
+            cc.values[off + r, slots[c]] = svals[r, c]
+            cc.mask[off + r, slots[c]] = True
+
+    def _merge_shard_grouped(self, shard: "PerfStore", off: int) -> None:
+        """Per-(vertex, counter-signature) shard merge: every written
+        entry lands through :meth:`set_entries` — the one write seam — as
+        one batched scatter per signature group.  The reference the block
+        fast path is tested against, and the fallback for overlapping
+        ranges."""
         for vid in np.nonzero(shard._mask.any(axis=0))[0].tolist():
             rows = np.nonzero(shard._mask[:, vid])[0]
             named = [(name, cc, cc.slot_of[vid])
@@ -671,6 +728,7 @@ class PerfStore:
         if not self._mask[p, vid]:
             self._count += 1
         self._mask[p, vid] = True
+        self._dirty[p] = True
         self.time[p, vid] = vec.time
         self.time_var[p, vid] = vec.time_var
         self.samples[p, vid] = vec.samples
@@ -911,6 +969,7 @@ class PPG:
             PerfStore(n_procs, len(psg.vertices))
         self.comm = CommIndex()
         self.meta: Dict[str, Any] = dict(meta or {})
+        self._device_view = None
 
     # -- perf ----------------------------------------------------------
     def set_perf(self, proc: int, vid: int, vec: PerfVector) -> None:
@@ -932,6 +991,18 @@ class PPG:
         """(n_procs, n_vertices) time-variance matrix (zero where unset) —
         input to the variance-weighted ("var") merge strategy."""
         return self.perf.var_matrix(len(self.psg.vertices))
+
+    def device_view(self):
+        """This PPG's cached :class:`~repro.core.shard.DeviceShardView` —
+        the perf store's per-host blocks pinned as jax device buffers with
+        dirty-row incremental upload.  Created lazily (jax imports happen
+        on first refresh, never here); the jitted detectors feed from it
+        so a ShardedStore-backed PPG never materializes the stacked
+        (P, V) host matrix."""
+        if self._device_view is None:
+            from repro.core.shard import DeviceShardView
+            self._device_view = DeviceShardView(self.perf)
+        return self._device_view
 
     def counter_matrix(self, name: str) -> np.ndarray:
         return self.perf.counter_matrix(name, len(self.psg.vertices))

@@ -43,7 +43,8 @@ def _store_by_proc(store: PerfStore, perf: "PerfByProc") -> None:
 
 
 def build_ppg(psg: PSG, n_procs: int, perf: Optional[PerfInput] = None,
-              *, replicate: bool = True, meta: Optional[dict] = None) -> PPG:
+              *, replicate: bool = True, meta: Optional[dict] = None,
+              sharded: bool = False) -> PPG:
     """Assemble a PPG.
 
     ``perf`` is a ready :class:`PerfStore` or
@@ -57,14 +58,43 @@ def build_ppg(psg: PSG, n_procs: int, perf: Optional[PerfInput] = None,
     per-process data.  Either way counters land in the store's
     column-sparse layout (one column block per counter, only at the
     vertices that carry it).
+
+    ``sharded=True`` keeps an iterable of per-host shards AS the blocks
+    of a :class:`~repro.core.shard.ShardedStore` (their ranges must tile
+    ``[0, n_procs)``) instead of merging them — the device-resident
+    detection path: e.g. per-host ``GraphProfiler.perf_shard`` blocks
+    feed the jitted detectors through ``ppg.device_view()`` without a
+    controller-side merge.  An empty shard iterable (no hosts reported
+    yet) with ``sharded=False`` assembles an empty ``n_procs``-row store.
     """
     store: Optional[PerfStore] = None
     if isinstance(perf, (PerfStore, ShardedStore)):
+        if sharded and not isinstance(perf, ShardedStore):
+            raise ValueError("sharded=True needs an iterable of per-host "
+                             "shards (or a ready ShardedStore), got a "
+                             "merged PerfStore")
+        if isinstance(perf, ShardedStore) and perf.n_procs != n_procs:
+            # a mismatched sharded store would route out-of-range procs
+            # into the last shard's local rows — fail here, like the
+            # shard-iterable path does
+            raise ValueError(f"ShardedStore tiles [0, {perf.n_procs}) "
+                             f"but n_procs is {n_procs}")
         store = perf
     elif perf is not None and not isinstance(perf, ABCMapping):
-        # iterable of per-host shards: streamed block-concatenation merge
-        store = PerfStore.assemble_streamed(
-            perf, n_procs=n_procs, n_vertices=len(psg.vertices))
+        if sharded:
+            # adopt the blocks as a ShardedStore — no merge, detection
+            # feeds from per-host (device-residable) blocks
+            store = ShardedStore.of(perf)
+            if store.n_procs != n_procs:
+                raise ValueError(f"shards tile [0, {store.n_procs}) but "
+                                 f"n_procs is {n_procs}")
+        else:
+            # iterable of per-host shards: streamed block-concat merge
+            store = PerfStore.assemble_streamed(
+                perf, n_procs=n_procs, n_vertices=len(psg.vertices))
+    elif sharded:
+        raise ValueError("sharded=True needs an iterable of per-host "
+                         "shards, not mapping/None perf data")
     ppg = PPG(psg=psg, n_procs=n_procs, perf=store, meta=dict(meta or {}))
     if perf and store is None:
         first = next(iter(perf.values()))

@@ -19,6 +19,12 @@ by ``proc_start``), and the blocks merge late, either
 straight into a ShardedStore (multi-host replay), and
 ``GraphProfiler.perf_shard`` emits a measured per-host block; both feed
 ``build_ppg`` unchanged.
+
+:class:`DeviceShardView` closes the online-detection loop: it pins the
+per-host blocks as jax device buffers with dirty-row incremental upload,
+so the jitted detectors consume device-resident inputs instead of a
+re-stacked, re-transferred host matrix on every call.  This module itself
+never imports jax (the view imports it lazily inside ``refresh``).
 """
 from __future__ import annotations
 
@@ -32,11 +38,18 @@ from repro.core.graph import PerfStore, PerfVector
 
 def shard_ranges(n_procs: int, n_hosts: int) -> List[Tuple[int, int]]:
     """Split ``[0, n_procs)`` into ``n_hosts`` contiguous (start, stop)
-    ranges, as even as possible (first ranges take the remainder)."""
+    ranges, as even as possible (first ranges take the remainder).
+
+    ``n_procs == 0`` is an explicit error: the empty store has no valid
+    tiling (:class:`ShardedStore` rejects empty ranges), so callers that
+    might shard zero processes fail loudly here instead of at the store."""
     n_procs, n_hosts = int(n_procs), int(n_hosts)
     if n_hosts <= 0:
         raise ValueError(f"n_hosts must be positive: {n_hosts}")
-    n_hosts = min(n_hosts, max(n_procs, 1))
+    if n_procs <= 0:
+        raise ValueError(f"cannot shard {n_procs} processes: ranges must "
+                         f"tile a non-empty [0, n_procs)")
+    n_hosts = min(n_hosts, n_procs)
     base, rem = divmod(n_procs, n_hosts)
     out, lo = [], 0
     for h in range(n_hosts):
@@ -106,6 +119,19 @@ class ShardedStore:
                                         for lo, hi in ranges]
         self.n_procs = ranges[-1][1]
         self._starts = np.asarray([lo for lo, _ in ranges], np.intp)
+
+    @classmethod
+    def of(cls, shards) -> "ShardedStore":
+        """Adopt existing :class:`PerfShard` blocks AS the store (no copy,
+        no merge) — e.g. per-host measured blocks from
+        ``GraphProfiler.perf_shard``.  The blocks' ranges must tile
+        ``[0, n_procs)`` contiguously; hosts may report in any order
+        (blocks are sorted by range, like the streamed merge accepts any
+        arrival order)."""
+        shards = sorted(shards, key=lambda s: s.proc_start)
+        store = cls([(s.proc_start, s.proc_stop) for s in shards])
+        store.shards = shards
+        return store
 
     # -- routing -------------------------------------------------------
     def shard_of(self, proc: int) -> PerfShard:
@@ -282,6 +308,196 @@ class ShardedStore:
         """Concatenate the blocks into one global PerfStore (the
         ``from_shards`` seam)."""
         return PerfStore.from_shards(self.shards, n_procs=self.n_procs)
+
+
+class DeviceShardView:
+    """Per-host perf blocks pinned as jax device buffers, incrementally.
+
+    The missing half of online detection: :class:`ShardedStore` keeps the
+    (P, V) time matrix as per-host blocks on the HOST, and every jitted
+    detect call used to re-assemble and re-transfer the whole stacked
+    matrix.  A view pins each block — time, time-variance, and the
+    column-sparse counter blocks — as device buffers once, then
+    :meth:`refresh` re-uploads only the rows written since the last
+    refresh (the store's dirty-row tracking, see
+    :meth:`~repro.core.graph.PerfStore.dirty_rows`), so the steady-state
+    per-detect transfer is O(dirty rows · V), not O(P · V).
+
+    Buffer lifecycle:
+
+    * construction stores only host references — no jax import, no
+      transfer (the analysis layer stays importable without jax);
+    * the first :meth:`refresh` uploads every block in full and clears
+      the dirty flags;
+    * subsequent refreshes upload ``store.dirty_rows()`` per block via an
+      on-device row scatter (``buf.at[rows].set``); a changed column
+      count, row count, dtype, or counter layout re-pins the affected
+      buffers in full;
+    * ``time_blocks()`` / ``var_blocks()`` hand the jitted detectors the
+      per-block device arrays — the detection kernels reduce them
+      blockwise, and only (V,)-sized results ever come back to the host.
+
+    One view per store: refresh consumes the store's dirty flags, so two
+    views over the same store would starve each other (``PPG.device_view``
+    caches exactly one).  Transfer accounting (``last_upload_rows`` /
+    ``last_upload_bytes`` / ``total_upload_bytes``) is asserted by
+    ``bench_graph_scale`` to scale with dirty rows.
+    """
+
+    __slots__ = ("blocks", "_time", "_var", "_counters", "_cols", "_dtype",
+                 "last_upload_rows", "last_upload_bytes",
+                 "total_upload_bytes", "refreshes", "full_uploads")
+
+    def __init__(self, store):
+        if isinstance(store, ShardedStore):
+            self.blocks: List[PerfStore] = list(store.shards)
+        elif isinstance(store, PerfStore):
+            self.blocks = [store]
+        else:
+            raise TypeError(f"DeviceShardView needs a PerfStore or "
+                            f"ShardedStore: {type(store).__name__}")
+        self._time: Optional[list] = None      # per-block device buffers
+        self._var: Optional[list] = None
+        self._counters: Optional[list] = None  # per-block {name: (vids, buf)}
+        self._cols = -1
+        self._dtype: Optional[np.dtype] = None
+        self.last_upload_rows = 0
+        self.last_upload_bytes = 0
+        self.total_upload_bytes = 0
+        self.refreshes = 0
+        self.full_uploads = 0
+
+    @property
+    def n_procs(self) -> int:
+        return sum(b.n_procs for b in self.blocks)
+
+    def row_ranges(self) -> List[Tuple[int, int]]:
+        """Each block's (start, stop) global proc range, in block order."""
+        out, lo = [], 0
+        for b in self.blocks:
+            start = int(getattr(b, "proc_start", lo))
+            out.append((start, start + b.n_procs))
+            lo = start + b.n_procs
+        return out
+
+    # -- upload --------------------------------------------------------
+    def _rows_slab(self, mat: np.ndarray, rows, V: int) -> np.ndarray:
+        """``mat[rows]`` padded/sliced to V columns, in the view dtype."""
+        n = mat.shape[1]
+        if n >= V:
+            slab = mat[rows, :V]
+        else:
+            slab = np.zeros((len(rows), V))
+            slab[:, :n] = mat[rows]
+        return np.ascontiguousarray(slab, self._dtype)
+
+    def refresh(self, n_vertices: Optional[int] = None,
+                dtype=np.float64) -> int:
+        """Bring the device buffers up to date; returns bytes uploaded.
+
+        ``n_vertices`` fixes the column count every block is padded or
+        sliced to (defaults to the widest block).  ``dtype`` is the buffer
+        precision — float64 buffers are created under a thread-local
+        ``enable_x64`` so the upload never silently downcasts."""
+        import contextlib
+
+        import jax.numpy as jnp
+        dtype = np.dtype(dtype)
+        if n_vertices is None:
+            n_vertices = max(b._cols for b in self.blocks)
+        V = int(n_vertices)
+        if dtype == np.float64:
+            from jax.experimental import enable_x64
+            ctx = enable_x64()
+        else:
+            ctx = contextlib.nullcontext()
+        full = (self._time is None or self._cols != V
+                or self._dtype != dtype
+                or any(buf.shape[0] != b.n_procs
+                       for buf, b in zip(self._time, self.blocks)))
+        self._cols, self._dtype = V, dtype
+        rows_up = bytes_up = 0
+        with ctx:
+            if full:
+                self._time, self._var, self._counters = [], [], []
+                self.full_uploads += 1
+                for b in self.blocks:
+                    every = np.arange(b.n_procs)
+                    t = self._rows_slab(b.time, every, V)
+                    v = self._rows_slab(b.time_var, every, V)
+                    self._time.append(jnp.asarray(t))
+                    self._var.append(jnp.asarray(v))
+                    rows_up += b.n_procs
+                    bytes_up += t.nbytes + v.nbytes
+                    pinned = {}
+                    for name in b.counter_names():
+                        vids, values, mask = b.counter_columns(name)
+                        slab = np.ascontiguousarray(
+                            np.where(mask, values, 0.0), dtype)
+                        pinned[name] = (tuple(vids.tolist()),
+                                        jnp.asarray(slab))
+                        bytes_up += slab.nbytes
+                    self._counters.append(pinned)
+                    b.clear_dirty()
+            else:
+                for i, b in enumerate(self.blocks):
+                    rows = b.dirty_rows()
+                    if not rows.size:
+                        continue
+                    t = self._rows_slab(b.time, rows, V)
+                    v = self._rows_slab(b.time_var, rows, V)
+                    self._time[i] = self._time[i].at[rows].set(t)
+                    self._var[i] = self._var[i].at[rows].set(v)
+                    rows_up += rows.size
+                    bytes_up += t.nbytes + v.nbytes
+                    pinned = self._counters[i]
+                    for name in b.counter_names():
+                        vids, values, mask = b.counter_columns(name)
+                        key = tuple(vids.tolist())
+                        have = pinned.get(name)
+                        if have is not None and have[0] == key:
+                            slab = np.ascontiguousarray(
+                                np.where(mask[rows], values[rows], 0.0),
+                                dtype)
+                            pinned[name] = (key,
+                                            have[1].at[rows].set(slab))
+                        else:       # new counter / new columns: re-pin
+                            slab = np.ascontiguousarray(
+                                np.where(mask, values, 0.0), dtype)
+                            pinned[name] = (key, jnp.asarray(slab))
+                        bytes_up += slab.nbytes
+                    b.clear_dirty()
+        self.last_upload_rows = rows_up
+        self.last_upload_bytes = bytes_up
+        self.total_upload_bytes += bytes_up
+        self.refreshes += 1
+        return bytes_up
+
+    # -- device reads (what the jitted detectors consume) --------------
+    def time_blocks(self) -> list:
+        """Per-block (n_local, V) device time matrices, in row order."""
+        if self._time is None:
+            raise RuntimeError("DeviceShardView.refresh() before reading")
+        return list(self._time)
+
+    def var_blocks(self) -> list:
+        if self._var is None:
+            raise RuntimeError("DeviceShardView.refresh() before reading")
+        return list(self._var)
+
+    def counter_blocks(self, name: str) -> List[Tuple[Tuple[int, ...], Any]]:
+        """Per-block ``(vids, (n_local, k) device values)`` for one
+        counter (masked-off entries are 0.0); empty vids where a block
+        never wrote it."""
+        if self._counters is None:
+            raise RuntimeError("DeviceShardView.refresh() before reading")
+        return [pinned.get(name, ((), None)) for pinned in self._counters]
+
+    def __repr__(self) -> str:
+        state = "unpinned" if self._time is None else \
+            f"{self._cols} cols, {np.dtype(self._dtype).name}"
+        return (f"DeviceShardView({len(self.blocks)} blocks, "
+                f"{self.n_procs} procs, {state})")
 
 
 def _take(val, sel: np.ndarray):

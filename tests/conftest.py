@@ -19,13 +19,38 @@ except ImportError:
     sys.modules["hypothesis"] = _hyp
     sys.modules["hypothesis.strategies"] = _hf.strategies
 
-import jax
-import jax.numpy as jnp
+try:
+    import jax
+    HAS_JAX = True
+except ImportError:                                # the jax-absent CI job
+    jax = None
+    HAS_JAX = False
+
 import numpy as np
 import pytest
 
-from repro.configs import ARCHS, get_smoke
-from repro.models.api import build_model
+# Modules whose imports need jax (models, configs with jnp dtypes, the
+# profiler/launch/serving layers).  Without jax they are skipped at
+# COLLECTION, so the rest of the suite — the pure-numpy analysis layer
+# and its lazy-import seam — runs and must pass with jax uninstalled.
+# A jax-free test file gaining a top-level jax dependency shows up in
+# the jax-absent CI job as a collection error, which is the point.
+_NEEDS_JAX = [
+    "test_checkpoint_trainer.py",
+    "test_commdep.py",
+    "test_configs.py",
+    "test_data_optim.py",
+    "test_elastic.py",
+    "test_hlo_shardings.py",
+    "test_kernels.py",
+    "test_launch.py",
+    "test_models_smoke.py",
+    "test_profiler_sim.py",
+    "test_psg.py",
+    "test_serving.py",
+]
+if not HAS_JAX:
+    collect_ignore = list(_NEEDS_JAX)
 
 
 @pytest.fixture(scope="session")
@@ -37,7 +62,10 @@ _BUNDLE_CACHE = {}
 
 
 def smoke_bundle(arch: str):
-    """Cached (cfg, model, params) at smoke scale."""
+    """Cached (cfg, model, params) at smoke scale (jax tests only —
+    imports resolve lazily so this module loads without jax)."""
+    from repro.configs import get_smoke
+    from repro.models.api import build_model
     if arch not in _BUNDLE_CACHE:
         cfg = get_smoke(arch)
         model = build_model(cfg)
@@ -47,6 +75,7 @@ def smoke_bundle(arch: str):
 
 
 def smoke_batch(cfg, batch=2, seq=32, train=True):
+    import jax.numpy as jnp
     toks = (jnp.arange(batch * (seq + (1 if train else 0)), dtype=jnp.int32)
             .reshape(batch, -1) * 7919) % cfg.vocab_size
     out = {"tokens": toks}

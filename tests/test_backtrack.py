@@ -218,3 +218,81 @@ def test_non_scalable_plus_backtrack_end_to_end():
     assert paths
     rcs = root_causes(paths, g, ppg=series[16])
     assert rcs
+
+
+# ---------------------------------------------------------------------------
+# backtrack_one: non-copying scanned-union view (regression)
+# ---------------------------------------------------------------------------
+
+def _backtrack_one_copying(ppg, start, *, reason, scanned, max_len=256):
+    """The pre-fix reference walk: rebuilds ``scanned | set(path)`` on
+    every step.  Retained here to pin the union-view rewrite to the old
+    semantics exactly."""
+    from repro.core.backtrack import (Path, WAIT_EPS, _comm_partner,
+                                      _control_end, _data_pred,
+                                      _is_collective, _is_p2p,
+                                      _latest_participant, _wait_of)
+    from repro.core.graph import BRANCH, CALL, LOOP
+    psg = ppg.psg
+    path = []
+    v = start
+    first = True
+    while v is not None and len(path) < max_len:
+        proc, vid = v
+        vert = psg.vertices[vid]
+        if vert.kind == "Root":
+            break
+        if _is_collective(psg, vid) and not first:
+            path.append(v)
+            break
+        path.append(v)
+        nxt = None
+        visited = scanned | set(path)            # the quadratic copy
+        if _is_collective(psg, vid):
+            late = _latest_participant(ppg, v)
+            if late is not None and late not in visited:
+                nxt = _data_pred(ppg, late, visited) or late
+            else:
+                nxt = _data_pred(ppg, v, visited)
+        elif _is_p2p(psg, vid):
+            if _wait_of(ppg, v) > WAIT_EPS:
+                nxt = _comm_partner(ppg, v, visited)
+            if nxt is None:
+                nxt = _data_pred(ppg, v, visited)
+        elif vert.kind in (LOOP, BRANCH, CALL) and v not in scanned:
+            nxt = _control_end(ppg, v, visited) or _data_pred(ppg, v,
+                                                              visited)
+        else:
+            nxt = _data_pred(ppg, v, visited)
+        first = False
+        v = nxt
+    scanned.update(path)
+    return Path(nodes=path, start_reason=reason)
+
+
+def test_backtrack_one_union_view_matches_copying_reference():
+    """The union-view walk must equal the old per-step-copy walk node for
+    node — including evolving shared scanned sets across many starts on
+    conflict-heavy random PPGs."""
+    rng = np.random.default_rng(11)
+    for trial in range(20):
+        n_procs = int(rng.integers(4, 20))
+        g = _random_psg(rng, n_procs)
+        vid = int(rng.integers(1, len(g.vertices)))
+        inj = {(p, vid): 0.2 + 0.01 * p for p in range(0, n_procs, 2)}
+        for _ in range(int(rng.integers(0, 5))):
+            inj[(int(rng.integers(0, n_procs)),
+                 int(rng.integers(1, len(g.vertices))))] = \
+                float(rng.uniform(0.05, 0.5))
+        res = simulate(g, n_procs, lambda p, v: 0.01, inject=inj,
+                       seed=trial)
+        ab = detect_abnormal(res.ppg, top_k=500)
+        scanned_new, scanned_ref = set(), set()
+        for a in ab:
+            got = backtrack_one(res.ppg, (a.proc, a.vid),
+                                reason="abnormal", scanned=scanned_new)
+            ref = _backtrack_one_copying(res.ppg, (a.proc, a.vid),
+                                         reason="abnormal",
+                                         scanned=scanned_ref)
+            assert got.nodes == ref.nodes, trial
+        assert scanned_new == scanned_ref

@@ -1,0 +1,323 @@
+"""Device-resident shard buffers feeding the jitted detectors (PR 5).
+
+Pins the tentpole to the host-fed semantics:
+
+* device-fed detection (per-host blocks pinned as device buffers,
+  blockwise merge/median/top-k kernels) must pick exactly the same
+  vertices as the host-fed jitted path and the numpy reference — f64
+  results bitwise where the math is order-independent (max merge, median,
+  winner sets), ~1e-12 for blockwise-reassociated sums, ~1e-4 under
+  ``SCALANA_DETECT_F32``;
+* the incremental upload must transfer exactly the rows written since
+  the previous detect call, and the device buffers must equal the host
+  blocks after every refresh — interleaved writes/detects included;
+* a ShardedStore-backed PPG must run detection WITHOUT materializing the
+  stacked host matrix (asserted by making the stacked views explode);
+* regression: an all-dead final scale (``total_max <= 0``) yields share
+  0 / no flags — never inf/nan (the unguarded-divide bug).
+
+Everything jax-dependent skips cleanly when jax is absent.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (COMM, COMP, PSG, DeviceShardView, PerfShard,
+                        PerfStore, ShardedStore, build_ppg, detect_abnormal,
+                        detect_non_scalable)
+from repro.core.graph import PerfVector
+from repro.core.inject import simulate
+
+
+def _step_psg(n_procs, n_comp=6):
+    g = PSG()
+    root = g.new_vertex("Root", "root")
+    g.root = root.vid
+    prev = None
+    for i in range(n_comp):
+        v = g.new_vertex(COMP, f"c{i}", parent=root.vid,
+                         source=f"m.py:{i}")
+        g.add_edge(root.vid, v.vid, "control")
+        if prev is not None:
+            g.add_edge(prev, v.vid, "data")
+        prev = v.vid
+    p2p = g.new_vertex(COMM, "ppermute", parent=root.vid, source="m.py:h")
+    p2p.comm_kind, p2p.comm_bytes = "ppermute", 1e5
+    p2p.p2p_pairs = [(p, (p + 1) % n_procs) for p in range(n_procs)]
+    g.add_edge(prev, p2p.vid, "data")
+    g.add_edge(root.vid, p2p.vid, "control")
+    ar = g.new_vertex(COMM, "psum", parent=root.vid, source="m.py:ar")
+    ar.comm_kind, ar.comm_bytes = "all_reduce", 1e6
+    g.add_edge(p2p.vid, ar.vid, "data")
+    g.add_edge(root.vid, ar.vid, "control")
+    return g
+
+
+def _base(p, vid):
+    return 0.01 * (1 + p % 3) + 0.001 * vid
+
+
+def _sim_pair(n_procs, n_hosts, inject=None, seed=0):
+    """(plain, sharded) bit-identical replays of the same scenario."""
+    g = _step_psg(n_procs)
+    plain = simulate(g, n_procs, _base, inject=inject, seed=seed)
+    sharded = simulate(g, n_procs, _base, inject=inject, seed=seed,
+                       shards=n_hosts)
+    return g, plain.ppg, sharded.ppg
+
+
+def _ab_key(ab):
+    return [(a.proc, a.vid, a.time, a.typical) for a in ab]
+
+
+# ---------------------------------------------------------------------------
+# device-fed == host-fed == numpy
+# ---------------------------------------------------------------------------
+
+def test_abnormal_device_equals_host_and_numpy():
+    pytest.importorskip("jax")
+    for n_procs, n_hosts, seed in [(12, 3, 0), (16, 4, 1), (9, 2, 2),
+                                   (24, 5, 3)]:
+        _, plain, sharded = _sim_pair(n_procs, n_hosts,
+                                      inject={(4, 2): 0.5}, seed=seed)
+        ab_np = detect_abnormal(plain, backend="numpy")
+        ab_host = detect_abnormal(plain, backend="jax")
+        ab_dev = detect_abnormal(sharded, backend="jax")
+        # winners, times AND typical (device median) bitwise vs numpy
+        assert _ab_key(ab_dev) == _ab_key(ab_np) == _ab_key(ab_host)
+
+
+def test_non_scalable_device_equals_host_and_numpy():
+    pytest.importorskip("jax")
+    g = _step_psg(16)
+
+    def t_at(p, vid, n):
+        return 0.08 if vid == 3 else 0.4 / n       # vid 3 does not scale
+
+    series_plain, series_sh = {}, {}
+    for n in (4, 8, 16):
+        series_plain[n] = simulate(g, n, lambda p, v, n=n: t_at(p, v, n)).ppg
+        series_sh[n] = simulate(g, n, lambda p, v, n=n: t_at(p, v, n),
+                                shards=min(4, n)).ppg
+    for strategy in ("mean", "max", "p0", "var"):
+        ns_np = detect_non_scalable(series_plain, backend="numpy",
+                                    strategy=strategy)
+        ns_host = detect_non_scalable(series_plain, backend="jax",
+                                      strategy=strategy)
+        ns_dev = detect_non_scalable(series_sh, backend="jax",
+                                     strategy=strategy)
+        assert [d.vid for d in ns_dev] == [d.vid for d in ns_np] \
+            == [d.vid for d in ns_host], strategy
+        assert ns_dev and ns_dev[0].vid == 3
+        for a, b in zip(ns_host, ns_dev):
+            # blockwise reassociation: sums agree to reduction-order
+            # rounding; the "max" merge is order-independent, so its
+            # merged times and slope land bitwise (share still divides by
+            # the blockwise-summed total step time)
+            tol = 0 if strategy == "max" else 1e-12
+            assert abs(a.slope - b.slope) <= tol * max(abs(a.slope), 1)
+            assert abs(a.share - b.share) <= 1e-12 * max(abs(a.share), 1)
+            for scale in a.times:
+                assert abs(a.times[scale] - b.times[scale]) <= \
+                    tol * max(abs(a.times[scale]), 1)
+
+
+def test_device_detection_f32_parity(monkeypatch):
+    pytest.importorskip("jax")
+    monkeypatch.setenv("SCALANA_DETECT_F32", "1")
+    g = _step_psg(12)
+    series_sh = {n: simulate(g, n, _base, shards=3).ppg for n in (6, 12)}
+    series_plain = {n: simulate(g, n, _base).ppg for n in (6, 12)}
+    ns_np = detect_non_scalable(series_plain, backend="numpy",
+                                min_share=0.0)
+    ns_dev = detect_non_scalable(series_sh, backend="jax", min_share=0.0)
+    assert [d.vid for d in ns_dev] == [d.vid for d in ns_np]
+    for a, b in zip(ns_np, ns_dev):
+        assert np.isclose(a.slope, b.slope, rtol=1e-4, atol=1e-4)
+        assert np.isclose(a.share, b.share, rtol=1e-4, atol=1e-4)
+    # abnormal: unambiguous stragglers (uniform base, distinct injects) —
+    # f32 rounding must not reorder clearly-separated winners
+    g2 = _step_psg(12)
+    inject = {(5, 1): 0.4, (2, 3): 0.2, (8, 2): 0.1}
+    plain = simulate(g2, 12, lambda p, vid: 0.01, inject=inject).ppg
+    sharded = simulate(g2, 12, lambda p, vid: 0.01, inject=inject,
+                       shards=3).ppg
+    ab_np = detect_abnormal(plain, backend="numpy")
+    ab_dev = detect_abnormal(sharded, backend="jax")
+    assert [(a.proc, a.vid) for a in ab_dev] == \
+        [(a.proc, a.vid) for a in ab_np]
+    for a, b in zip(ab_np, ab_dev):
+        assert np.isclose(a.typical, b.typical, rtol=1e-4, atol=1e-6)
+
+
+def test_device_path_never_stacks_host_matrix(monkeypatch):
+    """The acceptance criterion, asserted directly: detection on a
+    ShardedStore-backed PPG must not touch the stacked (P, V) host views.
+    """
+    pytest.importorskip("jax")
+    g = _step_psg(12)
+    sharded = simulate(g, 12, _base, inject={(3, 2): 0.5}, shards=3).ppg
+    series_sh = {n: simulate(g, n, _base, shards=3).ppg for n in (6, 12)}
+
+    def boom(*a, **k):                                 # pragma: no cover
+        raise AssertionError("stacked host matrix materialized")
+
+    monkeypatch.setattr(ShardedStore, "time_matrix", boom)
+    monkeypatch.setattr(ShardedStore, "var_matrix", boom)
+    ab = detect_abnormal(sharded, backend="jax")
+    assert ab and ab[0].proc == 3 and ab[0].vid == 2
+    ns = detect_non_scalable(series_sh, backend="jax", min_share=0.0)
+    assert [d.vid for d in ns] == [d.vid for d in
+                                   detect_non_scalable(
+                                       {n: simulate(g, n, _base).ppg
+                                        for n in (6, 12)},
+                                       backend="numpy", min_share=0.0)]
+
+
+# ---------------------------------------------------------------------------
+# dirty-row incremental upload
+# ---------------------------------------------------------------------------
+
+def _assert_buffers_match(view, V):
+    """Every device buffer equals its host block (padded to V columns)."""
+    for i, blk in enumerate(view.blocks):
+        np.testing.assert_array_equal(np.asarray(view.time_blocks()[i]),
+                                      blk.time_matrix(V))
+        np.testing.assert_array_equal(np.asarray(view.var_blocks()[i]),
+                                      blk.var_matrix(V))
+        for name in blk.counter_names():
+            vids, values, mask = blk.counter_columns(name)
+            key, buf = view.counter_blocks(name)[i]
+            assert key == tuple(vids.tolist())
+            np.testing.assert_array_equal(np.asarray(buf),
+                                          np.where(mask, values, 0.0))
+
+
+def test_incremental_upload_after_interleaved_writes():
+    pytest.importorskip("jax")
+    g = _step_psg(16)
+    ppg = simulate(g, 16, _base, shards=[(0, 5), (5, 11), (11, 16)]).ppg
+    V = len(g.vertices)
+    view = ppg.device_view()
+    assert view is ppg.device_view()                   # cached, one per PPG
+
+    view.refresh(V)                                    # first: full upload
+    assert view.full_uploads == 1 and view.last_upload_rows == 16
+    _assert_buffers_match(view, V)
+    full_bytes = view.last_upload_bytes
+
+    view.refresh(V)                                    # clean: no transfer
+    assert view.last_upload_rows == 0 and view.last_upload_bytes == 0
+
+    rng = np.random.default_rng(0)
+    for round_ in range(4):
+        rows = np.unique(rng.integers(0, 16, size=rng.integers(1, 5)))
+        vid = int(rng.integers(0, V))
+        ppg.perf.set_entries(rows, vid, 1.0 + round_,
+                             counters={"wait_s": 0.25})
+        if round_ == 2:                                # scalar write path
+            ppg.perf.set_entry(2, 1, 3.5, accumulate=True)
+            rows = np.union1d(rows, [2])
+        view.refresh(V)
+        assert view.full_uploads == 1                  # still incremental
+        assert view.last_upload_rows == rows.size
+        assert view.last_upload_bytes < full_bytes
+        _assert_buffers_match(view, V)
+        # detection agrees with the numpy reference after every round
+        assert _ab_key(detect_abnormal(ppg, backend="jax")) == \
+            _ab_key(detect_abnormal(ppg, backend="numpy"))
+
+    # a dtype flip re-pins in full (no stale f64 buffers feed f32 runs)
+    view.refresh(V, dtype=np.float32)
+    assert view.full_uploads == 2 and view.last_upload_rows == 16
+
+
+def test_device_view_single_store_and_errors():
+    pytest.importorskip("jax")
+    store = PerfStore(6, 4)
+    store.set_column(2, np.arange(6.0))
+    view = DeviceShardView(store)
+    with pytest.raises(RuntimeError):                  # read before refresh
+        view.time_blocks()
+    view.refresh(4)
+    assert len(view.time_blocks()) == 1
+    np.testing.assert_array_equal(np.asarray(view.time_blocks()[0]),
+                                  store.time_matrix(4))
+    assert view.row_ranges() == [(0, 6)]
+    with pytest.raises(TypeError):
+        DeviceShardView({})
+
+
+# ---------------------------------------------------------------------------
+# regression: unguarded share divide (total_max <= 0)
+# ---------------------------------------------------------------------------
+
+def _dead_top_series():
+    """Final scale whose root children are ALL dead (t == 0) while a
+    nested vertex still has time: total_max == 0."""
+    g = PSG()
+    root = g.new_vertex("Root", "root")
+    g.root = root.vid
+    loop = g.new_vertex("Loop", "loop", parent=root.vid)
+    g.add_edge(root.vid, loop.vid, "control")
+    body = g.new_vertex(COMP, "body", parent=loop.vid, source="m.py:9")
+    series = {}
+    for n in (2, 4, 8):
+        perf = {loop.vid: PerfVector(time=0.0 if n == 8 else 0.05,
+                                     samples=1),
+                body.vid: PerfVector(time=0.04, samples=1)}
+        series[n] = build_ppg(g, n, perf)
+    return series
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_total_max_zero_yields_zero_share_no_flags(backend):
+    if backend == "jax":
+        pytest.importorskip("jax")
+    series = _dead_top_series()
+    with np.errstate(all="raise"):                     # inf/nan would raise
+        out = detect_non_scalable(series, backend=backend, min_share=0.01)
+    assert out == []                                   # share 0: nothing
+
+
+def test_non_scalable_kernel_guards_total_max_directly():
+    detect_jax = pytest.importorskip("repro.core.detect_jax")
+    if not detect_jax.HAS_JAX:
+        pytest.skip("jax not importable")
+    S, P, V = 2, 3, 4
+    rng = np.random.default_rng(1)
+    t = rng.uniform(0.1, 1.0, (S, P, V))
+    M, slope, share, flagged = detect_jax.non_scalable_arrays(
+        [2, 4], t, np.zeros_like(t), np.ones((S, V), bool), 0.0,
+        -1.0, 0.35, 0.01, "mean")
+    assert np.all(share == 0.0) and not flagged.any()
+    assert np.isfinite(M).all() and np.isfinite(slope).all()
+
+
+# ---------------------------------------------------------------------------
+# measured-profile threading: profiler shards -> sharded PPG -> device path
+# ---------------------------------------------------------------------------
+
+def test_profiler_shards_feed_device_detection():
+    """Per-host ``GraphProfiler.perf_shard`` blocks adopted via
+    ``build_ppg(sharded=True)`` run device-fed detection equal to the
+    merged-store numpy reference."""
+    pytest.importorskip("jax")
+    import jax.numpy as jnp
+    from repro.core import GraphProfiler
+
+    def step(x):
+        return jnp.tanh(x @ x).sum()
+
+    prof = GraphProfiler(step, (np.ones((4, 4), np.float32),),
+                         sample_every=1)
+    prof.step(np.ones((4, 4), np.float32))
+    shards = [prof.perf_shard(proc_start=lo, n_procs=hi - lo)
+              for lo, hi in [(0, 3), (3, 5), (5, 8)]]
+    shards[1].set_entry(1, 1, 7.5)                 # host 1's straggler
+    ppg = build_ppg(prof.psg, 8, shards, sharded=True)
+    assert isinstance(ppg.perf, ShardedStore)
+    merged = build_ppg(prof.psg, 8, iter(shards))
+    ab_dev = detect_abnormal(ppg, backend="jax")
+    ab_ref = detect_abnormal(merged, backend="numpy")
+    assert _ab_key(ab_dev) == _ab_key(ab_ref)
+    assert any(a.proc == 4 and a.vid == 1 for a in ab_dev)

@@ -142,6 +142,123 @@ def test_shard_ranges_tile():
         shard_ranges(8, 0)
 
 
+def test_shard_ranges_zero_procs_rejected():
+    """Regression: shard_ranges(0, h) used to return [(0, 0)], which
+    ShardedStore then rejected with a confusing contiguity error — the
+    two now agree: sharding zero processes is an explicit ValueError at
+    both layers, and in ``simulate(..., shards=)``."""
+    with pytest.raises(ValueError, match="0 processes"):
+        shard_ranges(0, 4)
+    with pytest.raises(ValueError):
+        ShardedStore([(0, 0)])
+    with pytest.raises(ValueError):
+        simulate(_pipeline_psg(4), 0, lambda p, vid: 0.01, shards=2)
+
+
+def test_build_ppg_empty_shard_iterable():
+    """No hosts reported yet: streamed assembly of an empty iterable is a
+    valid (empty) n_procs-row store, and detection runs clean on it."""
+    g = _pipeline_psg(4)
+    ppg = build_ppg(g, 4, iter([]))
+    assert isinstance(ppg.perf, PerfStore)
+    assert ppg.perf.n_procs == 4 and len(ppg.perf) == 0
+    assert ppg.times_matrix().shape == (4, len(g.vertices))
+    assert detect_abnormal(ppg, backend="numpy") == []
+
+
+# ---------------------------------------------------------------------------
+# contiguous-block merge fast path == grouped reference
+# ---------------------------------------------------------------------------
+
+def _grouped_merge(shards, n_procs):
+    """Reference assembly through the retained per-(vertex, signature)
+    path only (the pre-fast-path behavior)."""
+    store = PerfStore(n_procs)
+    for sh in shards:
+        store.ensure_rows(sh.proc_start + sh.n_procs)
+        store.ensure_columns(sh._cols)
+        store._merge_shard_grouped(sh, sh.proc_start)
+    return store
+
+
+@given(entry_plan())
+@settings(max_examples=40, deadline=None)
+def test_merge_block_fast_path_equals_grouped(plan):
+    """Fresh-target merges take the whole-block fast path; it must be
+    bit-identical to the grouped set_entries reference on uneven ranges,
+    disjoint counter sets and per-row signatures."""
+    n_procs, ranges, entries = plan
+    entries = list(enumerate(entries))
+    shards = []
+    for lo, hi in ranges:
+        sh = PerfShard(lo, hi - lo)
+        _apply(sh, [(i, e) for i, e in entries if lo <= e[0] < hi], off=lo)
+        shards.append(sh)
+    fast = PerfStore.from_shards(shards, n_procs=n_procs)
+    slow = _grouped_merge(shards, n_procs)
+    _stores_equal(fast, slow)
+    np.testing.assert_array_equal(fast._mask, slow._mask[:, :fast._cols])
+    assert sorted(fast.dirty_rows()) == sorted(slow.dirty_rows())
+
+
+def test_merge_block_fast_path_disjoint_counters_uneven_ranges():
+    a = PerfShard(0, 3)      # wait_s only, vids {1, 5}
+    b = PerfShard(3, 2)      # flops only, vid 2; row signatures differ
+    a.set_entries([0, 2], 1, 1.5, counters={"wait_s": [0.1, 0.2]})
+    a.set_entries([1], 5, 2.5, counters={"wait_s": 0.3})
+    b.set_entries([0], 2, 3.5, counters={"flops": 1e9})
+    b.set_entries([1], 2, 4.5)                   # same vid, no counter
+    fast = PerfStore.from_shards([a, b])
+    slow = _grouped_merge([a, b], 5)
+    _stores_equal(fast, slow, V=6)
+    # overlap forces the grouped fallback and stays last-writer-wins
+    c = PerfShard(2, 2)
+    c.set_entries([0, 1], 1, 9.0)
+    fast.merge_shard(c)
+    slow.merge_shard(c)
+    _stores_equal(fast, slow, V=6)
+    np.testing.assert_array_equal(fast.time_column(1),
+                                  [1.5, 0.0, 9.0, 9.0, 0.0])
+
+
+# ---------------------------------------------------------------------------
+# sharded build_ppg (device-resident detection threading)
+# ---------------------------------------------------------------------------
+
+def test_build_ppg_sharded_keeps_blocks():
+    """``sharded=True`` adopts per-host shards AS the ShardedStore blocks
+    (no merge), producing the same detection as the merged store."""
+    g = _pipeline_psg(6)
+    res = simulate(g, 6, lambda p, vid: 0.01, inject={(2, 1): 0.4},
+                   shards=3)
+    ppg = build_ppg(g, 6, list(res.shards), sharded=True)
+    assert isinstance(ppg.perf, ShardedStore)
+    assert ppg.perf.shards[0] is res.shards[0]   # adopted, not copied
+    merged = build_ppg(g, 6, iter(res.shards))
+    assert np.array_equal(ppg.times_matrix(), merged.times_matrix())
+    assert [(x.proc, x.vid) for x in detect_abnormal(ppg, backend="numpy")] \
+        == [(x.proc, x.vid) for x in detect_abnormal(merged,
+                                                     backend="numpy")]
+    # hosts may report out of order: blocks are sorted by range
+    shuffled = build_ppg(g, 6, [res.shards[2], res.shards[0],
+                                res.shards[1]], sharded=True)
+    assert np.array_equal(shuffled.times_matrix(), merged.times_matrix())
+    with pytest.raises(ValueError):              # ranges must tile n_procs
+        build_ppg(g, 8, list(res.shards), sharded=True)
+    with pytest.raises(ValueError):              # gap in the tiling
+        build_ppg(g, 6, [PerfShard(0, 2), PerfShard(4, 2)], sharded=True)
+    with pytest.raises(ValueError):              # not a shard iterable
+        build_ppg(g, 6, {0: {1: PerfVector(time=0.1)}}, sharded=True)
+    with pytest.raises(ValueError):              # already-merged store
+        build_ppg(g, 6, PerfStore(6), sharded=True)
+    with pytest.raises(ValueError):              # no perf data at all
+        build_ppg(g, 6, None, sharded=True)
+    with pytest.raises(ValueError):              # ready store, wrong size
+        build_ppg(g, 8, ppg.perf, sharded=True)
+    with pytest.raises(ValueError):              # same check, sharded=False
+        build_ppg(g, 8, ppg.perf)
+
+
 # ---------------------------------------------------------------------------
 # ShardedStore: routed writes + stacked views == plain store
 # ---------------------------------------------------------------------------
