@@ -1,7 +1,7 @@
 PYTHONPATH := src:.
 export PYTHONPATH
 
-.PHONY: check test smoke bench bench-smoke docs-check
+.PHONY: check test smoke bench bench-smoke docs-check chaos-smoke
 
 test:
 	python -m pytest -x -q
@@ -18,9 +18,16 @@ smoke: bench-smoke
 docs-check:
 	python tools/check_docs.py
 
+# seeded fault-injection run of the always-on monitor (jax-free): the
+# streamed result must match the one-shot pipeline bit-identically, with
+# crash recovery and degraded-fleet coverage exercised; writes
+# chaos-report.txt (uploaded as a CI artifact)
+chaos-smoke:
+	python tools/chaos_smoke.py
+
 # tier-1 tests + the graph-core smoke benchmark (perf regressions fail
-# loudly) + executable documentation
-check: test bench-smoke docs-check
+# loudly) + executable documentation + the monitor chaos smoke
+check: test bench-smoke docs-check chaos-smoke
 
 bench:
 	python -m benchmarks.run

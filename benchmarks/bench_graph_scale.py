@@ -153,6 +153,72 @@ def build_p2p_heavy_psg(n_comp: int = 8, n_procs_hint: int = 8,
     return g
 
 
+def bench_monitor(psg, target: int, straggler: int, n_procs: int,
+                  backend: str):
+    """Steady-state ingest->detect latency of the always-on monitor,
+    clean fleet vs ~10% of hosts behind a seeded faulty transport.
+
+    Returns (clean_s, faulty_s, n_hosts, n_faulty) — per-step wall time
+    for flush(all hosts) + poll + detect, averaged post-warmup, with the
+    final streamed detection asserted identical to the one-shot run on
+    the fully-assembled truth store."""
+    from repro.core.shard import ShardedStore, shard_ranges
+    from repro.monitor import (FaultyTransport, Monitor, QueueTransport,
+                               ShardProducer)
+
+    n_hosts = max(2, min(128, n_procs // 64 or 2))
+    n_faulty = max(1, n_hosts // 10)
+    ranges = shard_ranges(n_procs, n_hosts)
+
+    @vectorized_base_times
+    def time_at(procs, vid):
+        t = np.full(procs.shape, 0.128 / n_procs)
+        if vid == target:
+            t[procs == straggler] += 0.05
+        return t
+
+    truth = simulate(psg, n_procs, time_at, shards=ranges).ppg
+    ab_ref = [(a.proc, a.vid) for a in detect_abnormal(truth,
+                                                       backend=backend)]
+    V = len(psg.vertices)
+    results = {}
+    for variant in ("clean", "faulty"):
+        queue = QueueTransport()
+        monitor = Monitor(psg, ranges, queue, comm=truth.comm,
+                          detect_every=None, backend=backend)
+        prod = ShardedStore(ranges, V)
+        producers = []
+        for h in range(n_hosts):
+            tr = queue
+            if variant == "faulty" and h < n_faulty:
+                # delivery through the same queue, but lossy: drops are
+                # retried (no-op sleeps), lost acks resend -> duplicates
+                tr = FaultyTransport(queue, seed=h, p_drop=0.3,
+                                     p_ack_loss=0.2)
+            producers.append(ShardProducer(h, prod.shards[h], tr,
+                                           sleep=lambda s: None))
+
+        def step():
+            for h, p in enumerate(producers):
+                sh = prod.shards[h]
+                sh.apply_rows(truth.perf.shards[h].extract_rows(
+                    np.arange(sh.n_procs)))
+                p.flush(heartbeat=False)
+            monitor.poll()
+            return monitor.force_detect()
+
+        step()                                   # warmup (jit, first pin)
+        t0 = time.perf_counter()
+        reps = 3
+        for _ in range(reps):
+            report = step()
+        results[variant] = (time.perf_counter() - t0) / reps
+        got = [(a.proc, a.vid) for a in report.abnormal]
+        assert got == ab_ref, \
+            f"monitor ({variant}) diverged from one-shot: {got} != {ab_ref}"
+    return results["clean"], results["faulty"], n_hosts, n_faulty
+
+
 def run(smoke: bool = False) -> List[Dict]:
     scales = SMOKE_SCALES if smoke else FULL_SCALES
     detect_backend = "numpy"
@@ -326,6 +392,18 @@ def run(smoke: bool = False) -> List[Dict]:
                 f"{device_dirty_bytes}B for {device_dirty_rows} rows vs " \
                 f"{device_full_bytes}B full pin at {n_procs} procs"
 
+        # -- always-on monitor: steady-state ingest -> detect latency ----
+        # per-host producers stream full-row deltas into a resident
+        # Monitor; one "step" is flush + poll + detect.  The faulty
+        # variant puts ~10% of the hosts behind a seeded lossy transport
+        # (drops retried with no-op backoff sleeps, lost acks causing
+        # duplicates), so the number reports the protocol overhead of a
+        # misbehaving fleet, not time.sleep.  Both variants must end bit-
+        # identical to the one-shot detection on the truth store.
+        (monitor_ingest_detect_s, monitor_faulty_ingest_detect_s,
+         monitor_hosts, monitor_faulty_hosts) = bench_monitor(
+            psg, target, straggler, n_procs, detect_backend)
+
         nbytes = top.nbytes()
         comm_nbytes = top.comm.nbytes()
         clique_nbytes = 16 * sum(
@@ -360,6 +438,10 @@ def run(smoke: bool = False) -> List[Dict]:
             "shard_hosts": len(res_sh.shards),
             "detect_device_s": detect_device_s,
             "detect_host_fed_s": detect_host_fed_s,
+            "monitor_ingest_detect_s": monitor_ingest_detect_s,
+            "monitor_faulty_ingest_detect_s": monitor_faulty_ingest_detect_s,
+            "monitor_hosts": monitor_hosts,
+            "monitor_faulty_hosts": monitor_faulty_hosts,
             "device_full_bytes": device_full_bytes,
             "device_dirty_bytes": device_dirty_bytes,
             "device_dirty_rows": device_dirty_rows,
@@ -386,6 +468,11 @@ def run(smoke: bool = False) -> List[Dict]:
              f"shard_merge_s={shard_merge_s:.4f};"
              f"detect_device_s={detect_device_s:.4f};"
              f"detect_host_fed_s={detect_host_fed_s:.4f};"
+             f"monitor_ingest_detect_s={monitor_ingest_detect_s:.4f};"
+             f"monitor_faulty_ingest_detect_s="
+             f"{monitor_faulty_ingest_detect_s:.4f};"
+             f"monitor_hosts={monitor_hosts};"
+             f"monitor_faulty_hosts={monitor_faulty_hosts};"
              f"device_full_bytes={device_full_bytes};"
              f"device_dirty_bytes={device_dirty_bytes};"
              f"device_dirty_rows={device_dirty_rows};"

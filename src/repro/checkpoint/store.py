@@ -17,6 +17,13 @@ Design for 1000+ nodes:
   after a successful commit, never before.
 * **Integrity** — every leaf's shape/dtype is recorded in ``manifest.json``
   and verified on load; partial/foreign directories are rejected.
+
+jax is OPTIONAL here: arbitrary pytrees (custom nodes, device arrays)
+need it, but plain nested dict/list/tuple trees of host arrays — the
+monitor's snapshot format — flatten/unflatten through a pure-python
+fallback with the same sorted-dict-key order jax uses, so the always-on
+monitor checkpoints and recovers in the jax-free analysis layer.  The
+on-disk format is identical either way.
 """
 from __future__ import annotations
 
@@ -27,20 +34,80 @@ import shutil
 import threading
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
-import jax
 import numpy as np
+
+_JAX_UNSET = object()
+_jax_mod: Any = _JAX_UNSET
+
+
+def _jax():
+    """jax if importable, else None — resolved on first USE, not at
+    import, so the jax-free layer (the always-on monitor snapshots
+    through this module) never pulls jax into the process."""
+    global _jax_mod
+    if _jax_mod is _JAX_UNSET:
+        try:
+            import jax as j
+            _jax_mod = j
+        except ImportError:
+            _jax_mod = None
+    return _jax_mod
+
 
 Pytree = Any
 
 _STEP_RE = re.compile(r"^step_(\d+)$")
 
 
+def _is_plain(tree) -> bool:
+    """Nested dict/list/tuple of host values: the tree shape the pure-
+    python flattener handles.  Plain trees take the jax-free path even
+    when jax IS installed (device arrays / custom nodes / None force the
+    jax pytree machinery)."""
+    if isinstance(tree, dict):
+        return all(_is_plain(v) for v in tree.values())
+    if isinstance(tree, (list, tuple)):
+        return all(_is_plain(v) for v in tree)
+    return isinstance(tree, (np.ndarray, np.generic, int, float, bool))
+
+
+def _to_host(leaf) -> np.ndarray:
+    if isinstance(leaf, (np.ndarray, np.generic, int, float, bool)):
+        return np.asarray(leaf)
+    j = _jax()
+    if j is None:
+        return np.asarray(leaf)
+    return np.asarray(j.device_get(leaf))
+
+
+def _flatten_plain(tree: Pytree, prefix: List[str],
+                   out: List[Tuple[str, Any]]) -> None:
+    """dict/list/tuple flattening matching jax's path order (dict keys
+    sorted), so both flatteners produce the same manifest keys."""
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            _flatten_plain(tree[k], prefix + [str(k)], out)
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            _flatten_plain(v, prefix + [str(i)], out)
+    else:
+        out.append(("/".join(prefix), tree))
+
+
 def _flatten_with_paths(tree: Pytree) -> List[Tuple[str, Any]]:
-    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
-    out = []
-    for path, leaf in flat:
-        key = "/".join(_path_token(p) for p in path)
-        out.append((key, leaf))
+    if not _is_plain(tree):
+        j = _jax()
+        if j is None:
+            raise TypeError("checkpoint tree has non-plain leaves and jax "
+                            "is not importable")
+        flat, _ = j.tree_util.tree_flatten_with_path(tree)
+        out = []
+        for path, leaf in flat:
+            key = "/".join(_path_token(p) for p in path)
+            out.append((key, leaf))
+        return out
+    out: List[Tuple[str, Any]] = []
+    _flatten_plain(tree, [], out)
     return out
 
 
@@ -81,7 +148,7 @@ def save_checkpoint(directory: str, step: int, tree: Pytree,
     }
     arrays: Dict[str, np.ndarray] = {}
     for i, (key, leaf) in enumerate(leaves):
-        arr = np.asarray(jax.device_get(leaf))
+        arr = _to_host(leaf)
         name = f"a{i}"
         arrays[name] = arr
         manifest["leaves"][key] = {
@@ -104,10 +171,8 @@ def load_checkpoint(directory: str, step: int, like: Pytree,
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
     npz = np.load(os.path.join(path, "arrays.npz"))
-    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
-    out_leaves = []
-    for p, leaf in flat:
-        key = "/".join(_path_token(t) for t in p)
+
+    def pick(key: str, leaf) -> Any:
         ent = manifest["leaves"].get(key)
         if ent is None:
             raise KeyError(f"checkpoint missing leaf {key!r}")
@@ -116,8 +181,47 @@ def load_checkpoint(directory: str, step: int, like: Pytree,
         if tuple(arr.shape) != want_shape:
             raise ValueError(
                 f"shape mismatch for {key}: ckpt {arr.shape} vs {want_shape}")
-        out_leaves.append(shard_fn(key, arr) if shard_fn else arr)
-    tree = jax.tree_util.tree_unflatten(treedef, out_leaves)
+        return shard_fn(key, arr) if shard_fn else arr
+
+    if not _is_plain(like):
+        j = _jax()
+        if j is None:
+            raise TypeError("checkpoint template has non-plain leaves and "
+                            "jax is not importable")
+        flat, treedef = j.tree_util.tree_flatten_with_path(like)
+        out_leaves = [pick("/".join(_path_token(t) for t in p), leaf)
+                      for p, leaf in flat]
+        tree = j.tree_util.tree_unflatten(treedef, out_leaves)
+    else:
+        def rebuild(node, prefix):
+            if isinstance(node, dict):
+                return {k: rebuild(node[k], prefix + [str(k)]) for k in node}
+            if isinstance(node, (list, tuple)):
+                vals = [rebuild(v, prefix + [str(i)])
+                        for i, v in enumerate(node)]
+                return type(node)(vals)
+            return pick("/".join(prefix), node)
+        tree = rebuild(like, [])
+    return tree, manifest.get("meta", {})
+
+
+def load_checkpoint_tree(directory: str, step: int) -> Tuple[Pytree, dict]:
+    """Template-free restore: rebuild the nested-dict tree straight from
+    the manifest keys (split on "/").  No ``like`` structure is needed —
+    the monitor's crash recovery uses this, since a cold aggregator knows
+    nothing about the fleet it is restoring.  Trees saved from lists come
+    back as dicts keyed by the stringified index."""
+    path = os.path.join(directory, f"step_{step}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    npz = np.load(os.path.join(path, "arrays.npz"))
+    tree: Dict[str, Any] = {}
+    for key, ent in manifest["leaves"].items():
+        parts = key.split("/")
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = npz[ent["file"]]
     return tree, manifest.get("meta", {})
 
 
@@ -134,7 +238,16 @@ class CheckpointManager:
     def save(self, step: int, tree: Pytree, *, blocking: bool = False,
              extra_meta: Optional[dict] = None) -> None:
         self.wait()                      # one in flight at a time
-        snapshot = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        if not _is_plain(tree):
+            snapshot = _jax().tree.map(_to_host, tree)
+        else:
+            def _map(node):
+                if isinstance(node, dict):
+                    return {k: _map(v) for k, v in node.items()}
+                if isinstance(node, (list, tuple)):
+                    return type(node)(_map(v) for v in node)
+                return _to_host(node)
+            snapshot = _map(tree)
 
         def work():
             try:

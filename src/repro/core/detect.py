@@ -60,12 +60,17 @@ def _resolve_backend(backend: Optional[str]):
     process already imported it; "jax" imports (and raises if unavailable);
     "numpy" never touches jax.
     """
-    if backend is None:
+    from_env = backend is None
+    if from_env:
         backend = os.environ.get("SCALANA_DETECT_BACKEND", "auto")
+    backend = str(backend).strip().lower()
+    if backend not in ("numpy", "jax", "auto"):
+        origin = " (from SCALANA_DETECT_BACKEND)" if from_env else ""
+        raise ValueError(
+            f"unknown detect backend{origin}: {backend!r}; valid values "
+            f"are 'numpy', 'jax', 'auto'")
     if backend == "numpy":
         return None
-    if backend not in ("auto", "jax"):
-        raise ValueError(f"unknown detect backend: {backend!r}")
     if backend == "auto" and "jax" not in sys.modules:
         return None
     try:
@@ -80,6 +85,25 @@ def _resolve_backend(backend: Optional[str]):
                               "importable")
         return None
     return detect_jax
+
+
+def _norm_mask(proc_mask, n_procs: int) -> Optional[np.ndarray]:
+    """Validate a live-process mask; return the live row indices.
+
+    ``None`` (or an all-live mask) means no degradation and returns None.
+    Masked detection is exact ROW-SUBSETTING, not zeroing: a dead host's
+    rows may hold stale non-zero readings, and the cross-process median
+    counts zeros, so only excluding the rows outright reproduces a
+    one-shot run over a store that never contained them.
+    """
+    if proc_mask is None:
+        return None
+    m = np.asarray(proc_mask, bool)
+    if m.shape != (n_procs,):
+        raise ValueError(f"proc_mask shape {m.shape} != ({n_procs},)")
+    if m.all():
+        return None
+    return np.nonzero(m)[0]
 
 
 @dataclasses.dataclass
@@ -228,7 +252,9 @@ def detect_non_scalable(series: Mapping[int, PPG], *,
                         min_share: float = 0.02,
                         top_k: int = 10,
                         strategy: str = "mean",
-                        backend: Optional[str] = None) -> List[NonScalable]:
+                        backend: Optional[str] = None,
+                        proc_mask: Optional[np.ndarray] = None
+                        ) -> List[NonScalable]:
     """series: {n_procs: PPG}. Flags vertices whose scaling slope deviates
     from ideal by > slope_margin and whose time share is significant.
 
@@ -238,7 +264,13 @@ def detect_non_scalable(series: Mapping[int, PPG], *,
     (largest) scale is backed by a :class:`~repro.core.shard.ShardedStore`
     is fed from device-resident shard buffers (each PPG's cached
     ``device_view()``; only dirty rows re-upload) — the stacked host
-    matrix is never materialized."""
+    matrix is never materialized.
+
+    ``proc_mask``: optional (n_procs,) bool over the REFERENCE (largest)
+    scale's processes; False rows (dead/stale hosts) are excluded from
+    the merge exactly as if the reference store never contained them
+    (see :func:`_norm_mask`).  A masked sharded reference falls back to
+    the stacked host path."""
     scales = sorted(series)
     if not scales:
         return []
@@ -246,11 +278,15 @@ def detect_non_scalable(series: Mapping[int, PPG], *,
     psg = ref.psg
     V = len(psg.vertices)
     top = psg.children(psg.root)
+    live_idx = _norm_mask(proc_mask, ref.n_procs)
+    if live_idx is not None and live_idx.size == 0:
+        return []
 
     S = len(scales)
     present = np.zeros((S, V), bool)         # vertex exists at that scale
     jx = _resolve_backend(backend) if strategy in JIT_STRATEGIES else None
-    if jx is not None and isinstance(ref.perf, ShardedStore):
+    if jx is not None and isinstance(ref.perf, ShardedStore) \
+            and live_idx is None:
         # device-fed: each scale's per-host blocks feed the kernels from
         # its cached DeviceShardView (dirty rows re-upload, nothing
         # else); neither the stacked (S, Pmax, V) tensor nor the sharded
@@ -266,6 +302,8 @@ def detect_non_scalable(series: Mapping[int, PPG], *,
             min_share, strategy)
     else:
         t_ref = ref.times_matrix()
+        if live_idx is not None:
+            t_ref = t_ref[live_idx]          # exact row-subset, not zeroed
         # share guards against total_max <= 0 (an all-dead final scale)
         # in every backend: share is 0 there, flagging nothing, instead
         # of the inf/nan garbage an unguarded divide produced
@@ -274,15 +312,21 @@ def detect_non_scalable(series: Mapping[int, PPG], *,
         if jx is not None:
             # stacked (S, Pmax, V) layout: scales with fewer processes are
             # padded with dead (0.0) readings, which every merge ignores
-            p_max = max(series[p].n_procs for p in scales)
+            sizes = [series[p].n_procs for p in scales]
+            sizes[-1] = t_ref.shape[0]
+            p_max = max(sizes)
             T = np.zeros((S, p_max, V))
             VAR = np.zeros((S, p_max, V))
             for si, p in enumerate(scales):
                 ppg = series[p]
                 vp = min(len(ppg.psg.vertices), V)
                 if vp:
-                    T[si, :ppg.n_procs, :vp] = ppg.times_matrix()[:, :vp]
-                    VAR[si, :ppg.n_procs, :vp] = ppg.var_matrix()[:, :vp]
+                    tm = t_ref if si == S - 1 else ppg.times_matrix()
+                    vm = ppg.var_matrix()
+                    if si == S - 1 and live_idx is not None:
+                        vm = vm[live_idx]
+                    T[si, :tm.shape[0], :vp] = tm[:, :vp]
+                    VAR[si, :vm.shape[0], :vp] = vm[:, :vp]
                     present[si, :vp] = True
             M, slope, share, flagged = jx.non_scalable_arrays(
                 scales, T, VAR, present, total_max, ideal_slope,
@@ -293,9 +337,14 @@ def detect_non_scalable(series: Mapping[int, PPG], *,
                 ppg = series[p]
                 vp = min(len(ppg.psg.vertices), V)
                 if vp:
-                    var = ppg.var_matrix()[:, :vp] if strategy == "var" \
-                        else None
-                    M[si, :vp] = _merge_matrix(ppg.times_matrix()[:, :vp],
+                    tm = t_ref if si == S - 1 else ppg.times_matrix()
+                    var = None
+                    if strategy == "var":
+                        var = ppg.var_matrix()
+                        if si == S - 1 and live_idx is not None:
+                            var = var[live_idx]
+                        var = var[:, :vp]
+                    M[si, :vp] = _merge_matrix(tm[:, :vp],
                                                strategy, var=var)
                     present[si, :vp] = True
             slope = _fit_slopes(scales, M, (M > 0.0) & present)
@@ -321,15 +370,25 @@ def detect_non_scalable(series: Mapping[int, PPG], *,
 def detect_abnormal(ppg: PPG, *, abnorm_thd: float = 1.3,
                     min_share: float = 0.01,
                     top_k: int = 20,
-                    backend: Optional[str] = None) -> List[Abnormal]:
+                    backend: Optional[str] = None,
+                    proc_mask: Optional[np.ndarray] = None) -> List[Abnormal]:
     """Per-process outliers at one scale (AbnormThd x cross-process median).
 
     ``backend`` as in :func:`detect_non_scalable`.  On the jax backend, a
     :class:`~repro.core.shard.ShardedStore`-backed PPG runs entirely from
     device-resident shard buffers (incremental dirty-row upload; median,
-    flags, and top-k device-side) — the online-detection fast path."""
+    flags, and top-k device-side) — the online-detection fast path.
+
+    ``proc_mask``: optional (n_procs,) bool of LIVE processes (the
+    monitor's degraded-fleet contract).  False rows are excluded from the
+    step time, the median and the flagging by exact row-subsetting (see
+    :func:`_norm_mask`); reported ``proc`` indices stay global.  On the
+    device path the live rows are gathered on the device."""
     psg = ppg.psg
     if not len(psg.vertices) or not ppg.n_procs:
+        return []
+    live_idx = _norm_mask(proc_mask, ppg.n_procs)
+    if live_idx is not None and live_idx.size == 0:
         return []
     top = psg.children(psg.root)
 
@@ -346,10 +405,12 @@ def detect_abnormal(ppg: PPG, *, abnorm_thd: float = 1.3,
         # (P, V) host matrix is never materialized
         vids, procs, typical, _ = jx.abnormal_topk_view(
             ppg.device_view(), len(psg.vertices), top, abnorm_thd,
-            min_share, top_k)
+            min_share, top_k, live_rows=live_idx)
         picks = list(zip(vids.tolist(), procs.tolist()))
     else:
         t = ppg.times_matrix()                         # (P, V)
+        if live_idx is not None:
+            t = t[live_idx]                  # exact row-subset, not zeroed
         step_time = float(t[:, top].sum(axis=1).max()) if top else 0.0
         step_time = step_time or 1e-12
         if jx is not None:
@@ -375,6 +436,8 @@ def detect_abnormal(ppg: PPG, *, abnorm_thd: float = 1.3,
 
     out: List[Abnormal] = []
     for vid, proc in picks:
+        if live_idx is not None:             # local (live-subset) -> global
+            proc = int(live_idx[proc])
         v = psg.vertices[vid]
         tv, ty = float(ppg.get_time(proc, vid)), float(typical[vid])
         out.append(Abnormal(

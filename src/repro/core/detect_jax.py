@@ -223,6 +223,21 @@ if HAS_JAX:
         step_time = jnp.where(step_time > 0.0, step_time, 1e-12)
         return _median_flags_topk(t, abnorm_thd, min_share, step_time, k)
 
+    @partial(jax.jit, static_argnums=(5,))
+    def _abnormal_topk_blocks_live_kernel(ts, live, top_idx, abnorm_thd,
+                                          min_share, k):
+        """Degraded-fleet variant: gather only LIVE rows on the device.
+
+        ``live`` holds the live global row indices (monitor fleets with
+        dead/stale hosts).  Masked rows are excluded by the gather — not
+        zeroed — so the step time, the cross-process median and the flag
+        matrix are exactly those of a store that never contained the
+        dead rows (the median counts zeros; zeroing would poison it)."""
+        t = jnp.concatenate(ts, axis=0)[live]         # (n_live, V)
+        step_time = t[:, top_idx].sum(axis=1).max()
+        step_time = jnp.where(step_time > 0.0, step_time, 1e-12)
+        return _median_flags_topk(t, abnorm_thd, min_share, step_time, k)
+
 
 def _precision():
     """(dtype, x64-context) for the kernel wrappers.
@@ -318,7 +333,8 @@ def abnormal_topk(t: np.ndarray, abnorm_thd: float, min_share: float,
 
 
 def abnormal_topk_view(view, n_vertices: int, top: Sequence[int],
-                       abnorm_thd: float, min_share: float, k: int
+                       abnorm_thd: float, min_share: float, k: int,
+                       live_rows: Optional[np.ndarray] = None
                        ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, int]:
     """Abnormal detection fed straight from a
     :class:`~repro.core.shard.DeviceShardView` — the online entry point.
@@ -328,18 +344,30 @@ def abnormal_topk_view(view, n_vertices: int, top: Sequence[int],
     the device, where the step time, median, flagging and top-k ranking
     all run.  The host never materializes the stacked (P, V) matrix.
     ``top`` is the root's child vids (the step-time columns).  Returns
-    ``(vids, procs, typical, n_flagged)`` like :func:`abnormal_topk`."""
+    ``(vids, procs, typical, n_flagged)`` like :func:`abnormal_topk`.
+
+    ``live_rows``: optional live global row indices (degraded fleets).
+    The gather runs on the device and the returned ``procs`` index INTO
+    ``live_rows`` (the caller maps back to global procs), matching the
+    host path's row-subset semantics."""
     dtype, ctx = _precision()
     with ctx:
         view.refresh(n_vertices, dtype)
         ts = tuple(view.time_blocks())
-        order, _, count, typical = _abnormal_topk_blocks_kernel(
-            ts, jnp.asarray(np.asarray(top, np.int32)),
-            float(abnorm_thd), float(min_share), int(k))
+        top_d = jnp.asarray(np.asarray(top, np.int32))
+        if live_rows is None:
+            order, _, count, typical = _abnormal_topk_blocks_kernel(
+                ts, top_d, float(abnorm_thd), float(min_share), int(k))
+            n_procs = view.n_procs
+        else:
+            live = jnp.asarray(np.asarray(live_rows, np.int32))
+            order, _, count, typical = _abnormal_topk_blocks_live_kernel(
+                ts, live, top_d, float(abnorm_thd), float(min_share),
+                int(k))
+            n_procs = int(len(live_rows))
         n_flagged = int(count)
         order = np.asarray(order[:min(int(k), n_flagged)])
         typical = np.asarray(typical)
-    n_procs = view.n_procs
     return order // n_procs, order % n_procs, typical, n_flagged
 
 

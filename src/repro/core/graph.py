@@ -283,6 +283,39 @@ class PerfVector:
     counters: Dict[str, float] = field(default_factory=dict)  # PAPI analogue
 
 
+@dataclass
+class RowBlock:
+    """A self-contained copy of a row subset of a :class:`PerfStore`.
+
+    The wire/snapshot unit of the streaming monitor: a per-host producer
+    packages its shard's dirty rows as a RowBlock
+    (:meth:`PerfStore.extract_rows`), and the aggregator overwrites the
+    same rows of its replica with it (:meth:`PerfStore.apply_rows`) —
+    full row STATE, not an increment, so re-applying a block is
+    idempotent and applying blocks in sequence order reproduces the
+    source store bit for bit.
+
+    ``rows`` are row indices local to the source store; ``counters``
+    maps name -> (vids, (k, m) values, (k, m) mask) restricted to the
+    columns carrying data at these rows.
+    """
+    rows: np.ndarray                  # (k,) row indices
+    n_cols: int                       # column count the matrices cover
+    time: np.ndarray                  # (k, n_cols)
+    time_var: np.ndarray              # (k, n_cols)
+    samples: np.ndarray               # (k, n_cols) int64
+    mask: np.ndarray                  # (k, n_cols) bool
+    counters: Dict[str, Tuple[np.ndarray, np.ndarray, np.ndarray]] = \
+        field(default_factory=dict)
+
+    def nbytes(self) -> int:
+        n = (self.rows.nbytes + self.time.nbytes + self.time_var.nbytes
+             + self.samples.nbytes + self.mask.nbytes)
+        for vids, values, mask in self.counters.values():
+            n += vids.nbytes + values.nbytes + mask.nbytes
+        return n
+
+
 class CounterColumns:
     """Column-sparse per-counter storage (a CSC layout over vertex ids).
 
@@ -604,6 +637,125 @@ class PerfStore:
             else:
                 cc.values[p, s] = val
             cc.mask[p, s] = True
+
+    # -- row-state transfer (the streaming monitor's delta seam) -------
+    def extract_rows(self, rows) -> RowBlock:
+        """Copy the full state of a row subset into a :class:`RowBlock`.
+
+        The block carries everything those rows hold — time / variance /
+        samples / entry mask, plus each counter's columns restricted to
+        the ones with data at these rows — so applying it elsewhere
+        (:meth:`apply_rows`) reproduces the rows exactly.  This is the
+        per-host producer's flush unit: ``extract_rows(dirty_rows())``
+        is a sequence-numbered shard delta."""
+        rows = np.asarray(rows, np.intp)
+        counters: Dict[str, Tuple[np.ndarray, np.ndarray, np.ndarray]] = {}
+        for name, cc in self._counters.items():
+            vids, values, mask = cc.columns()
+            keep = mask[rows].any(axis=0)
+            if keep.any():
+                counters[name] = (vids[keep].copy(),
+                                  values[np.ix_(rows, np.nonzero(keep)[0])],
+                                  mask[np.ix_(rows, np.nonzero(keep)[0])])
+        return RowBlock(rows=rows.copy(), n_cols=self._cols,
+                        time=self.time[rows].copy(),
+                        time_var=self.time_var[rows].copy(),
+                        samples=self.samples[rows].copy(),
+                        mask=self._mask[rows].copy(),
+                        counters=counters)
+
+    def apply_rows(self, block: RowBlock,
+                   rows: Optional[np.ndarray] = None) -> None:
+        """Overwrite a row subset with a :class:`RowBlock`'s state.
+
+        Target ``rows`` default to ``block.rows`` (the aggregator replica
+        case: same local indices); pass explicit rows to land the block
+        at a different row range (the live-subfleet compaction).  The
+        rows' prior state — entries AND counters — is fully replaced, so
+        applying the same block twice is idempotent, and applying a
+        host's blocks in sequence order leaves the replica bit-identical
+        to the source shard.  Applied rows are marked dirty (a device
+        view over this store re-uploads them)."""
+        rows = block.rows if rows is None else np.asarray(rows, np.intp)
+        if rows.size == 0:
+            return
+        self.ensure_columns(block.n_cols)
+        c = block.n_cols
+        old = int(np.count_nonzero(self._mask[rows]))
+        self._mask[rows] = False
+        self._mask[rows, :c] = block.mask
+        self._count += int(np.count_nonzero(block.mask)) - old
+        self.time[rows] = 0.0
+        self.time[rows, :c] = block.time
+        self.time_var[rows] = 0.0
+        self.time_var[rows, :c] = block.time_var
+        self.samples[rows] = 0
+        self.samples[rows, :c] = block.samples
+        self._dirty[rows] = True
+        for cc in self._counters.values():
+            k = len(cc.vids)
+            cc.values[rows, :k] = 0.0
+            cc.mask[rows, :k] = False
+        for name, (vids, values, mask) in block.counters.items():
+            cc = self._counter_cols(name)
+            slots = np.asarray([cc.slot(v) for v in vids.tolist()], np.intp)
+            cc.values[np.ix_(rows, slots)] = values
+            cc.mask[np.ix_(rows, slots)] = mask
+
+    # -- whole-store state (snapshot / restore seam) -------------------
+    def state_arrays(self) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+        """(arrays, meta): the store's full state as plain numpy arrays.
+
+        ``arrays`` is a nested dict (checkpoint-friendly pytree) of
+        copies; ``meta`` holds the JSON-serializable layout (row/column
+        counts, counter names by index).  Together they round-trip
+        through :meth:`load_state` bit-identically — the monitor's crash
+        snapshot is one ``state_arrays()`` per shard."""
+        names = list(self._counters)
+        arrays: Dict[str, Any] = {
+            "time": self.time.copy(), "time_var": self.time_var.copy(),
+            "samples": self.samples.copy(), "mask": self._mask.copy(),
+            "counters": {},
+        }
+        for i, name in enumerate(names):
+            vids, values, mask = self._counters[name].columns()
+            arrays["counters"][f"c{i}"] = {
+                "vids": vids.copy(), "values": values.copy(),
+                "mask": mask.copy()}
+        meta = {"n_procs": int(self.n_procs), "n_cols": int(self._cols),
+                "counter_names": names}
+        return arrays, meta
+
+    def load_state(self, arrays: Mapping[str, Any],
+                   meta: Mapping[str, Any]) -> None:
+        """Restore the state captured by :meth:`state_arrays` into this
+        store (dimensions grow as needed; prior contents are replaced).
+        Restored rows are all marked dirty, so a fresh device view
+        re-uploads everything on its first refresh."""
+        time = np.asarray(arrays["time"])
+        rows, cols = time.shape
+        self.ensure_rows(rows)
+        self.ensure_columns(cols)
+        self.time[:, :] = 0.0
+        self.time_var[:, :] = 0.0
+        self.samples[:, :] = 0
+        self._mask[:, :] = False
+        self.time[:rows, :cols] = time
+        self.time_var[:rows, :cols] = arrays["time_var"]
+        self.samples[:rows, :cols] = arrays["samples"]
+        self._mask[:rows, :cols] = arrays["mask"]
+        self._count = int(np.count_nonzero(self._mask))
+        self._dirty[:] = True
+        self._counters = {}
+        for i, name in enumerate(meta["counter_names"]):
+            blk = arrays["counters"][f"c{i}"]
+            cc = self._counter_cols(name)
+            for v in np.asarray(blk["vids"]).tolist():
+                cc.slot(int(v))
+            k = len(cc.vids)
+            cc.ensure_rows(self.n_procs)
+            cc.values[:rows, :k] = blk["values"]
+            cc.mask[:rows, :k] = blk["mask"]
 
     # -- shard merge (streamed multi-host assembly) --------------------
     def merge_shard(self, shard: "PerfStore") -> None:

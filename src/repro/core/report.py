@@ -23,17 +23,24 @@ def _fmt_node(psg: PSG, node) -> str:
 def render_report(ppg: PPG, non_scalable: Sequence[NonScalable],
                   abnormal: Sequence[Abnormal], paths: Sequence[Path],
                   *, title: str = "ScalAna scaling-loss report",
-                  max_abnormal: int = 10) -> str:
+                  max_abnormal: int = 10,
+                  coverage: Optional[str] = None) -> str:
     """Text report of the full diagnosis.
 
     ``max_abnormal`` caps the abnormal-vertex listing; when more were
     flagged, the listing ends with an explicit "… and N more" line
-    instead of truncating silently."""
+    instead of truncating silently.
+
+    ``coverage`` is an optional fleet-coverage annotation (the always-on
+    monitor's degraded-fleet contract: every report states how much of
+    the fleet it covers), rendered right under the header counts."""
     psg = ppg.psg
     lines: List[str] = [title, "=" * len(title), ""]
 
     lines.append(f"processes: {ppg.n_procs}   vertices: "
                  f"{len(psg.vertices)}   comm edges: {len(ppg.comm_edges)}")
+    if coverage is not None:
+        lines.append(coverage)
     lines.append("")
 
     lines.append("## Non-scalable vertices (log-log slope vs ideal -1.0)")

@@ -381,15 +381,20 @@ class DeviceShardView:
         return out
 
     # -- upload --------------------------------------------------------
-    def _rows_slab(self, mat: np.ndarray, rows, V: int) -> np.ndarray:
-        """``mat[rows]`` padded/sliced to V columns, in the view dtype."""
+    def _rows_slab(self, mat: np.ndarray, rows, V: int,
+                   dtype: np.dtype) -> np.ndarray:
+        """``mat[rows]`` padded/sliced to V columns, in ``dtype``.
+
+        The dtype is passed in rather than read from ``self._dtype``
+        because refresh commits the view dtype only after every upload
+        succeeded — mid-refresh, ``self._dtype`` is still the OLD one."""
         n = mat.shape[1]
         if n >= V:
             slab = mat[rows, :V]
         else:
             slab = np.zeros((len(rows), V))
             slab[:, :n] = mat[rows]
-        return np.ascontiguousarray(slab, self._dtype)
+        return np.ascontiguousarray(slab, dtype)
 
     def refresh(self, n_vertices: Optional[int] = None,
                 dtype=np.float64) -> int:
@@ -415,18 +420,23 @@ class DeviceShardView:
                 or self._dtype != dtype
                 or any(buf.shape[0] != b.n_procs
                        for buf, b in zip(self._time, self.blocks)))
-        self._cols, self._dtype = V, dtype
         rows_up = bytes_up = 0
+        # Every upload is STAGED: new buffers build up in local lists and
+        # commit — together with the stores' dirty-flag clears — only
+        # after every transfer succeeded.  A device upload that raises
+        # mid-refresh (OOM, backend error inside ``at[].set``) therefore
+        # leaves the view's buffers AND the dirty flags untouched, so a
+        # retried refresh re-uploads the very rows the failed call lost;
+        # clearing eagerly used to drop them forever.
         with ctx:
             if full:
-                self._time, self._var, self._counters = [], [], []
-                self.full_uploads += 1
+                new_time, new_var, new_counters = [], [], []
                 for b in self.blocks:
                     every = np.arange(b.n_procs)
-                    t = self._rows_slab(b.time, every, V)
-                    v = self._rows_slab(b.time_var, every, V)
-                    self._time.append(jnp.asarray(t))
-                    self._var.append(jnp.asarray(v))
+                    t = self._rows_slab(b.time, every, V, dtype)
+                    v = self._rows_slab(b.time_var, every, V, dtype)
+                    new_time.append(jnp.asarray(t))
+                    new_var.append(jnp.asarray(v))
                     rows_up += b.n_procs
                     bytes_up += t.nbytes + v.nbytes
                     pinned = {}
@@ -437,20 +447,29 @@ class DeviceShardView:
                         pinned[name] = (tuple(vids.tolist()),
                                         jnp.asarray(slab))
                         bytes_up += slab.nbytes
-                    self._counters.append(pinned)
+                    new_counters.append(pinned)
+                self._time, self._var = new_time, new_var
+                self._counters = new_counters
+                self.full_uploads += 1
+                for b in self.blocks:
                     b.clear_dirty()
             else:
+                new_time = list(self._time)
+                new_var = list(self._var)
+                new_counters = [dict(p) for p in self._counters]
+                touched = []
                 for i, b in enumerate(self.blocks):
                     rows = b.dirty_rows()
                     if not rows.size:
                         continue
-                    t = self._rows_slab(b.time, rows, V)
-                    v = self._rows_slab(b.time_var, rows, V)
-                    self._time[i] = self._time[i].at[rows].set(t)
-                    self._var[i] = self._var[i].at[rows].set(v)
+                    touched.append(b)
+                    t = self._rows_slab(b.time, rows, V, dtype)
+                    v = self._rows_slab(b.time_var, rows, V, dtype)
+                    new_time[i] = new_time[i].at[rows].set(t)
+                    new_var[i] = new_var[i].at[rows].set(v)
                     rows_up += rows.size
                     bytes_up += t.nbytes + v.nbytes
-                    pinned = self._counters[i]
+                    pinned = new_counters[i]
                     for name in b.counter_names():
                         vids, values, mask = b.counter_columns(name)
                         key = tuple(vids.tolist())
@@ -466,7 +485,11 @@ class DeviceShardView:
                                 np.where(mask, values, 0.0), dtype)
                             pinned[name] = (key, jnp.asarray(slab))
                         bytes_up += slab.nbytes
+                self._time, self._var = new_time, new_var
+                self._counters = new_counters
+                for b in touched:
                     b.clear_dirty()
+        self._cols, self._dtype = V, dtype
         self.last_upload_rows = rows_up
         self.last_upload_bytes = bytes_up
         self.total_upload_bytes += bytes_up

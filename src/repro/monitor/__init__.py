@@ -1,0 +1,35 @@
+"""Always-on monitoring: streaming shard ingestion + resident detection.
+
+The package turns the one-shot detect/backtrack pipeline into a
+fault-tolerant service (ROADMAP: "always-on monitor"):
+
+* :mod:`~repro.monitor.transport` — the pluggable delivery seam
+  (``Transport`` / ``QueueTransport``) and the seeded fault injector
+  (``FaultyTransport``).
+* :mod:`~repro.monitor.producer` — per-host dirty-row flushing with
+  sequence numbers, retry/backoff, and an unacked buffer
+  (``ShardProducer`` / ``ShardDelta`` / ``Heartbeat``).
+* :mod:`~repro.monitor.aggregator` — the resident ``Monitor``:
+  idempotent sequence-window ingestion, heartbeats/staleness, degraded
+  (live-subfleet) detection, snapshot/restore, report streaming.
+* :mod:`~repro.monitor.degraded` — live-subfleet PPG compaction.
+* :mod:`~repro.monitor.chaos` — the end-to-end chaos harness
+  (``chaos_run``), used by tests, ``make chaos-smoke`` and benchmarks.
+
+Imports stay jax-free (detection backends resolve lazily, exactly as in
+one-shot use).
+"""
+from repro.monitor.aggregator import (FleetStatus, HostStatus, Monitor,
+                                      MonitorReport)
+from repro.monitor.chaos import ChaosResult, build_chaos_psg, chaos_run
+from repro.monitor.degraded import live_subppg, remap_paths
+from repro.monitor.producer import Heartbeat, ShardDelta, ShardProducer
+from repro.monitor.transport import (FaultyTransport, QueueTransport,
+                                     Transport, TransportError)
+
+__all__ = [
+    "ChaosResult", "FaultyTransport", "FleetStatus", "Heartbeat",
+    "HostStatus", "Monitor", "MonitorReport", "QueueTransport",
+    "ShardDelta", "ShardProducer", "Transport", "TransportError",
+    "build_chaos_psg", "chaos_run", "live_subppg", "remap_paths",
+]

@@ -124,3 +124,78 @@ def test_abnormal_property_injected_always_found(straggler, vid, ratio):
     ppg = build_ppg(psg, 8, perf)
     found = detect_abnormal(ppg, abnorm_thd=1.3)
     assert any((a.proc, a.vid) == (straggler, vid) for a in found)
+
+
+# ---------------------------------------------------------------------------
+# backend validation + degraded-fleet row masks
+# ---------------------------------------------------------------------------
+
+def test_unknown_backend_raises_with_valid_values_listed():
+    psg = _linear_psg()
+    perf = {p: {v.vid: PerfVector(time=0.1) for v in psg.vertices
+                if v.kind == COMP} for p in range(4)}
+    ppg = build_ppg(psg, 4, perf)
+    with pytest.raises(ValueError, match=r"'numpy', 'jax', 'auto'"):
+        detect_abnormal(ppg, backend="torch")
+    # case/whitespace are forgiven, not errors
+    assert detect_abnormal(ppg, backend="  NumPy ") == \
+        detect_abnormal(ppg, backend="numpy")
+
+
+def test_env_backend_validated_and_attributed(monkeypatch):
+    psg = _linear_psg()
+    perf = {p: {v.vid: PerfVector(time=0.1) for v in psg.vertices
+                if v.kind == COMP} for p in range(4)}
+    ppg = build_ppg(psg, 4, perf)
+    monkeypatch.setenv("SCALANA_DETECT_BACKEND", "cuda")
+    with pytest.raises(ValueError,
+                       match=r"\(from SCALANA_DETECT_BACKEND\): 'cuda'"):
+        detect_abnormal(ppg)
+    monkeypatch.setenv("SCALANA_DETECT_BACKEND", "numpy")
+    detect_abnormal(ppg)                       # valid value passes through
+
+
+def test_proc_mask_excludes_rows_exactly():
+    """Masked detection == one-shot on a store that never held the dead
+    rows (exclusion, not zero-pollution: zeros would shift the median)."""
+    psg = _linear_psg()
+    perf = {p: {v.vid: PerfVector(time=0.1) for v in psg.vertices
+                if v.kind == COMP} for p in range(8)}
+    perf[5][2] = PerfVector(time=0.5)          # straggler on a DEAD proc
+    perf[2][3] = PerfVector(time=0.4)          # straggler on a live proc
+    ppg = build_ppg(psg, 8, perf)
+    mask = np.ones(8, bool)
+    mask[4:6] = False
+    live = np.nonzero(mask)[0]
+    sub = build_ppg(psg, 6, {i: perf[int(p)] for i, p in enumerate(live)})
+    got = detect_abnormal(ppg, proc_mask=mask, backend="numpy")
+    want = detect_abnormal(sub, backend="numpy")
+    assert got, "live straggler must still be found"
+    assert [(a.vid, a.proc, a.time, a.typical, a.ratio) for a in got] == \
+        [(a.vid, int(live[a.proc]), a.time, a.typical, a.ratio)
+         for a in want]
+    assert all(a.proc != 5 for a in got)       # dead straggler is silent
+
+
+def test_proc_mask_shape_mismatch_raises():
+    psg = _linear_psg()
+    perf = {p: {v.vid: PerfVector(time=0.1) for v in psg.vertices
+                if v.kind == COMP} for p in range(4)}
+    ppg = build_ppg(psg, 4, perf)
+    with pytest.raises(ValueError, match="proc_mask"):
+        detect_abnormal(ppg, proc_mask=np.ones(7, bool))
+
+
+def test_non_scalable_proc_mask_subsets_reference_scale():
+    series = simulate_series(_linear_psg(), [4, 8, 16],
+                             lambda p, vid, n: 0.05 * n + 0.01 * vid)
+    mask = np.ones(16, bool)                   # reference = largest scale
+    mask[3:7] = False
+    out = detect_non_scalable(series, proc_mask=mask)
+    all_live = detect_non_scalable(series, proc_mask=np.ones_like(mask))
+    ref = detect_non_scalable(series)
+    assert [(d.vid, d.slope, d.share) for d in all_live] == \
+        [(d.vid, d.slope, d.share) for d in ref]
+    # empty live set: nothing to diagnose, never a crash
+    assert detect_non_scalable(series, proc_mask=np.zeros_like(mask)) == []
+    assert isinstance(out, list)

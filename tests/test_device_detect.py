@@ -321,3 +321,128 @@ def test_profiler_shards_feed_device_detection():
     ab_ref = detect_abnormal(merged, backend="numpy")
     assert _ab_key(ab_dev) == _ab_key(ab_ref)
     assert any(a.proc == 4 and a.vid == 1 for a in ab_dev)
+
+
+# ---------------------------------------------------------------------------
+# degraded-fleet row masks on the device path (PR 6)
+# ---------------------------------------------------------------------------
+
+def test_abnormal_device_proc_mask_equals_numpy_masked():
+    """Masked device detection == masked numpy == one-shot on a fleet
+    that never contained the dead rows (exclusion, not zero-pollution)."""
+    pytest.importorskip("jax")
+    n_procs, n_hosts = 16, 4
+    _, plain, sharded = _sim_pair(n_procs, n_hosts,
+                                  inject={(2, 2): 6.0, (9, 3): 6.0}, seed=0)
+    mask = np.ones(n_procs, bool)
+    mask[8:12] = False                 # host 2 dead (incl. straggler p9)
+    live = np.nonzero(mask)[0]
+
+    got_dev = detect_abnormal(sharded, backend="jax", proc_mask=mask)
+    got_np = detect_abnormal(plain, backend="numpy", proc_mask=mask)
+    assert _ab_key(got_dev) == _ab_key(got_np)
+    assert any(a.proc == 2 for a in got_dev)       # live straggler found
+    assert all(a.proc != 9 for a in got_dev)       # dead one is silent
+    assert all(mask[a.proc] for a in got_dev)      # procs are GLOBAL
+
+    # reference: a store that simply never had the dead rows
+    restricted = PerfStore(live.size, len(plain.psg.vertices))
+    restricted.apply_rows(plain.perf.extract_rows(live),
+                          rows=np.arange(live.size))
+    sub = build_ppg(plain.psg, live.size, restricted)
+    want = detect_abnormal(sub, backend="numpy")
+    assert _ab_key(got_np) == [(int(live[p]), v, t, m)
+                               for p, v, t, m in _ab_key(want)]
+
+
+def test_device_proc_mask_reuses_buffers_across_masks():
+    """Changing the mask between detects must not force a re-upload —
+    the live gather happens on device, the pinned buffers stand."""
+    pytest.importorskip("jax")
+    n_procs = 12
+    _, _, sharded = _sim_pair(n_procs, 3, inject={(1, 2): 5.0}, seed=1)
+    full = detect_abnormal(sharded, backend="jax")
+    view = sharded.device_view()
+    uploads = view.total_upload_bytes
+    for dead in (0, 4, 8):
+        mask = np.ones(n_procs, bool)
+        mask[dead] = False
+        detect_abnormal(sharded, backend="jax", proc_mask=mask)
+    assert view.total_upload_bytes == uploads      # no re-transfer
+    again = detect_abnormal(sharded, backend="jax")
+    assert _ab_key(again) == _ab_key(full)         # full-fleet path intact
+
+
+# ---------------------------------------------------------------------------
+# refresh atomicity: a failed upload must not eat the dirty flags (PR 6)
+# ---------------------------------------------------------------------------
+
+def test_refresh_failure_keeps_dirty_rows_for_retry(monkeypatch):
+    """A device upload that raises mid-refresh leaves the dirty flags and
+    the pinned buffers untouched; the retried refresh re-uploads exactly
+    the rows the failed call lost.  (Regression: clearing dirty flags
+    eagerly dropped those rows forever.)"""
+    pytest.importorskip("jax")
+    n_procs = 12
+    _, _, sharded = _sim_pair(n_procs, 3, seed=2)
+    view = sharded.perf.device_view() if hasattr(sharded.perf, "device_view") \
+        else DeviceShardView(sharded.perf)
+    view.refresh()                                  # clean baseline upload
+    assert all(not b.dirty_rows().size for b in view.blocks)
+
+    # dirty a couple of rows, then make the upload die mid-flight
+    sharded.perf.set_entry(1, 1, 9.0)
+    sharded.perf.set_entry(7, 2, 9.5)
+    calls = {"n": 0}
+    real = DeviceShardView._rows_slab
+
+    def dying(self, mat, rows, V, dtype):
+        calls["n"] += 1
+        if calls["n"] >= 2:
+            raise RuntimeError("injected device OOM")
+        return real(self, mat, rows, V, dtype)
+
+    monkeypatch.setattr(DeviceShardView, "_rows_slab", dying)
+    before_time = [np.asarray(t).copy() for t in view.time_blocks()]
+    with pytest.raises(RuntimeError, match="injected device OOM"):
+        view.refresh()
+    monkeypatch.undo()
+
+    # the failed refresh changed NOTHING: flags intact, buffers intact
+    dirty = np.concatenate([b.dirty_rows() + b.proc_start
+                            for b in view.blocks])
+    assert sorted(dirty.tolist()) == [1, 7]
+    for buf, ref in zip(view.time_blocks(), before_time):
+        np.testing.assert_array_equal(np.asarray(buf), ref)
+
+    # the retry re-uploads exactly those rows and converges to the hosts
+    view.refresh()
+    assert view.last_upload_rows == 2
+    assert all(not b.dirty_rows().size for b in view.blocks)
+    host = np.concatenate([b.time for b in view.blocks], axis=0)
+    dev = np.concatenate([np.asarray(t) for t in view.time_blocks()], axis=0)
+    np.testing.assert_array_equal(dev, host)
+
+
+def test_refresh_failure_on_full_upload_leaves_view_unprimed(monkeypatch):
+    """Same contract on the FULL-upload branch: a fresh view whose first
+    refresh dies stays unprimed (reads still refuse) and the stores stay
+    fully dirty for the retry."""
+    pytest.importorskip("jax")
+    _, _, sharded = _sim_pair(8, 2, seed=3)
+    view = DeviceShardView(sharded.perf)
+
+    def dying(self, mat, rows, V, dtype):
+        raise RuntimeError("boom on first slab")
+
+    monkeypatch.setattr(DeviceShardView, "_rows_slab", dying)
+    with pytest.raises(RuntimeError, match="boom on first slab"):
+        view.refresh()
+    monkeypatch.undo()
+    with pytest.raises(RuntimeError):
+        view.time_blocks()                          # still unprimed
+    assert all(b.dirty_rows().size == b.n_procs for b in view.blocks)
+    view.refresh()                                  # retry fully recovers
+    host = np.concatenate([b.time for b in view.blocks], axis=0)
+    dev = np.concatenate([np.asarray(t) for t in view.time_blocks()], axis=0)
+    np.testing.assert_array_equal(dev, host)

@@ -1,0 +1,119 @@
+"""render_report edge cases + the monitor's streamed-report golden shape.
+
+jax-free; exercises the exact listing-cap / "… and N more" / coverage
+contract the always-on monitor renders its stream through.
+"""
+import dataclasses
+
+import numpy as np
+
+from repro.core import (PPG, PerfStore, build_ppg, detect_abnormal,
+                        render_report)
+from repro.core.backtrack import backtrack
+from repro.core.detect import Abnormal
+from repro.core.inject import simulate
+from repro.core.shard import shard_ranges
+from repro.monitor import Monitor, QueueTransport, ShardProducer
+from repro.core.shard import ShardedStore
+from repro.monitor.chaos import build_chaos_psg
+
+
+def _ppg(n_procs=8, inject=None):
+    psg = build_chaos_psg(6)
+    sim = simulate(psg, n_procs,
+                   lambda p, v: 0.0 if psg.vertices[v].kind == "Comm"
+                   else 1.0 + 0.01 * v,
+                   inject=inject or {}, comm_time=lambda *a: 0.05,
+                   jitter=0.0, seed=0)
+    return psg, sim.ppg
+
+
+def _fake_abnormal(psg, n):
+    v = psg.vertices[1]
+    return [Abnormal(vid=1, proc=p, kind=v.kind, name=v.name,
+                     time=2.0, typical=1.0, ratio=2.0,
+                     source=v.source or "") for p in range(n)]
+
+
+def test_empty_report_renders_every_section_with_none():
+    _, ppg = _ppg()
+    text = render_report(ppg, [], [], [])
+    assert "## Non-scalable vertices" in text
+    assert "## Abnormal vertices" in text
+    assert "## Backtracking root-cause paths" in text
+    assert "## Root causes" in text
+    assert text.count("(none)") == 3          # every list section is empty
+    assert "… and" not in text
+
+
+def test_max_abnormal_caps_listing_with_exact_remainder():
+    psg, ppg = _ppg()
+    ab = _fake_abnormal(psg, 7)
+    text = render_report(ppg, [], ab, [], max_abnormal=3)
+    listed = [l for l in text.splitlines() if l.startswith("  - v1 p")]
+    assert len(listed) == 3
+    assert "… and 4 more" in text
+
+    # exactly at the cap: no remainder line
+    text = render_report(ppg, [], ab, [], max_abnormal=7)
+    assert "… and" not in text
+    assert len([l for l in text.splitlines()
+                if l.startswith("  - v1 p")]) == 7
+
+
+def test_max_abnormal_zero_lists_nothing_but_counts_all():
+    psg, ppg = _ppg()
+    ab = _fake_abnormal(psg, 5)
+    text = render_report(ppg, [], ab, [], max_abnormal=0)
+    assert not [l for l in text.splitlines() if l.startswith("  - v1 p")]
+    assert "… and 5 more" in text
+
+
+def test_coverage_line_sits_under_the_header_counts():
+    _, ppg = _ppg()
+    cov = "fleet coverage: 6/8 procs, 3/4 hosts live (DEGRADED: host h1 excluded)"
+    text = render_report(ppg, [], [], [], coverage=cov)
+    lines = text.splitlines()
+    i = next(i for i, l in enumerate(lines) if l.startswith("processes:"))
+    assert lines[i + 1] == cov
+    # and absent by default
+    assert "fleet coverage" not in render_report(ppg, [], [], [])
+
+
+def test_monitor_report_stream_golden_shape():
+    """The monitor's streamed reports carry the same render contract."""
+    psg = build_chaos_psg(6)
+    n_procs, n_hosts = 8, 2
+    ranges = shard_ranges(n_procs, n_hosts)
+    sim = simulate(psg, n_procs,
+                   lambda p, v: 0.0 if psg.vertices[v].kind == "Comm"
+                   else 1.0 + 0.01 * v,
+                   inject={(1, 2): 4.0}, comm_time=lambda *a: 0.05,
+                   jitter=0.0, seed=0, shards=ranges)
+    truth = sim.ppg
+    tr = QueueTransport()
+    mon = Monitor(psg, ranges, tr, comm=truth.comm, detect_every=None,
+                  max_abnormal=1, title="monitor stream")
+    prod = ShardedStore(ranges, len(psg.vertices))
+    for h in range(n_hosts):
+        p = ShardProducer(h, prod.shards[h], tr, sleep=lambda s: None)
+        prod.shards[h].apply_rows(truth.perf.shards[h].extract_rows(
+            np.arange(prod.shards[h].n_procs)))
+        p.flush(heartbeat=False)
+    mon.poll()
+    rep = mon.force_detect()
+
+    assert rep.text.splitlines()[0] == "monitor stream"
+    assert "fleet coverage: 8/8 procs, 2/2 hosts live" in rep.text
+    assert "DEGRADED" not in rep.text
+    # the cap applies to the stream: one listed, the rest counted
+    if len(rep.abnormal) > 1:
+        assert f"… and {len(rep.abnormal) - 1} more" in rep.text
+    # the one-shot pipeline renders the identical body (minus coverage)
+    ab = detect_abnormal(truth, backend="numpy")
+    paths = backtrack(truth, [], ab)
+    one_shot = render_report(truth, [], ab, paths, title="monitor stream",
+                             max_abnormal=1)
+    stripped = "\n".join(l for l in rep.text.splitlines()
+                         if not l.startswith("fleet coverage:"))
+    assert stripped == one_shot
