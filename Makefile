@@ -1,7 +1,8 @@
 PYTHONPATH := src:.
 export PYTHONPATH
 
-.PHONY: check test smoke bench bench-smoke docs-check chaos-smoke
+.PHONY: check test smoke bench bench-smoke docs-check chaos-smoke \
+	scenario-smoke
 
 test:
 	python -m pytest -x -q
@@ -25,9 +26,17 @@ docs-check:
 chaos-smoke:
 	python tools/chaos_smoke.py
 
+# two bank scenarios end-to-end from committed real-model traces
+# (jax-free): detect + backtrack + root causes scored against declared
+# accuracy floors at 512/2048 procs; writes scenario-accuracy.csv
+# (uploaded as a CI artifact)
+scenario-smoke:
+	python tools/scenario_smoke.py
+
 # tier-1 tests + the graph-core smoke benchmark (perf regressions fail
-# loudly) + executable documentation + the monitor chaos smoke
-check: test bench-smoke docs-check chaos-smoke
+# loudly) + executable documentation + the monitor chaos smoke + the
+# scenario-bank accuracy smoke
+check: test bench-smoke docs-check chaos-smoke scenario-smoke
 
 bench:
 	python -m benchmarks.run

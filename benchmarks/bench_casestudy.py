@@ -13,6 +13,14 @@ each on a REAL train-step PSG with measured base times:
   3. nekbone analogue — a non-scalable dgemm-like vertex (serial
      fraction); log-log fitting flags it and backtracking reports the
      source line.
+
+Plus the GROUND-TRUTH SCENARIO BANK accuracy table (``case_scenario_bank``):
+every committed scenario in ``repro.scenarios.SCENARIOS`` — real-model
+trace x declarative fault x machine-checkable truth — runs end-to-end at
+512 and 2048 processes on BOTH detection backends, and its root-cause
+precision / recall / path-hit-rate are asserted against the scenario's
+declared floors.  One row per (scenario, scale, backend) cell; a floor
+violation raises, failing the bench run loudly.
 """
 from __future__ import annotations
 
@@ -116,10 +124,35 @@ def case_non_scalable_dgemm(arch="yi-6b") -> None:
          f"target={psg.vertices[target].source}")
 
 
+def case_scenario_bank(scales=(512, 2048),
+                       backends=("numpy", "jax")) -> None:
+    """The scenario-bank accuracy table: scenario x scale x backend."""
+    from repro.scenarios import SCENARIOS, run_and_score
+
+    for name, sc in SCENARIOS.items():
+        for n_procs in scales:
+            for backend in backends:
+                t0 = time.perf_counter()
+                res, score = run_and_score(sc, n_procs, backend=backend)
+                dt = time.perf_counter() - t0
+                assert score.passes(sc.truth), (
+                    f"{name} @ {n_procs} procs ({backend}) under floors: "
+                    f"{score.row()} vs precision>={sc.truth.min_precision} "
+                    f"recall>={sc.truth.min_recall} "
+                    f"path_hit>={sc.truth.min_path_hit}")
+                emit(f"casestudy/scenario/{name}/{n_procs}procs/{backend}",
+                     dt * 1e6,
+                     f"precision={score.precision:.3f};"
+                     f"recall={score.recall:.3f};"
+                     f"path_hit={score.path_hit_rate:.3f};"
+                     f"channel={res.channel};trace={sc.trace}")
+
+
 def run() -> None:
     case_straggler_loop()
     case_load_imbalance()
     case_non_scalable_dgemm()
+    case_scenario_bank()
 
 
 if __name__ == "__main__":

@@ -15,14 +15,15 @@ scale:
     top scale (the vectorized-replay acceptance criterion);
   * wall time for detection (numpy AND — in the full run, when jax is
     importable — the jitted backend, post-warmup) and backtracking;
-  * ``backtrack_s`` vs ``backtrack_batched_s`` — the frontier-batched
-    walk against the retained scalar reference on a many-straggler
-    scenario (>= 256 flagged (proc, vertex) pairs at the top scale); the
-    paths are asserted identical, and the scalar walk is asserted to
-    stay within a small factor of the batched engine at the top scale —
-    its per-step ``scanned | set(path)`` copy used to go quadratic there
-    (1.3s vs 0.11s batched at 8192), fixed by the non-copying union view
-    in ``backtrack_one``;
+  * ``backtrack_s`` vs ``backtrack_batched_s`` — the scalar walk (the
+    "auto" default; frontier-batching is opt-in since it stopped winning
+    here, 0.62-1.12x) against the opt-in batched engine on a
+    many-straggler scenario (>= 256 flagged (proc, vertex) pairs at the
+    top scale); the paths are asserted identical, and the engines are
+    asserted to stay within a small factor of EACH OTHER at the top
+    scale — the scalar walk's per-step ``scanned | set(path)`` copy used
+    to go quadratic there (1.3s vs 0.11s batched at 8192), fixed by the
+    non-copying union view in ``backtrack_one``;
   * ``shard_merge_s`` — merging an 8-host sharded replay
     (``simulate(..., shards=8)``) into one store through
     ``PerfStore.from_shards`` (contiguous fresh ranges take the
@@ -334,14 +335,19 @@ def run(smoke: bool = False) -> List[Dict]:
         if not smoke and n_procs == max(scales):
             assert len(ab_bt) >= 256, \
                 f"backtrack scenario flagged only {len(ab_bt)} pairs"
-            # the scalar walk's per-step `scanned | set(path)` copy used
-            # to go quadratic here (1.3s vs 0.11s batched at 8192/512
-            # flagged); the union-view fix keeps it within a small factor
-            # of the batched engine — a regression to copying fails this
+            # the scalar walk (the "auto" default since batched was
+            # demoted — it wins or ties at 0.62-1.12x here) used to go
+            # quadratic in its per-step `scanned | set(path)` copy (1.3s
+            # vs 0.11s batched at 8192/512 flagged); the union-view fix
+            # keeps the two engines within a small factor of each other,
+            # and a regression in EITHER direction fails this
             assert backtrack_s <= 3.0 * backtrack_batched_s + 0.05, \
                 f"scalar backtrack quadratic again? {backtrack_s:.3f}s vs " \
                 f"batched {backtrack_batched_s:.3f}s at {n_procs} procs " \
                 f"({len(ab_bt)} flagged)"
+            assert backtrack_batched_s <= 3.0 * backtrack_s + 0.05, \
+                f"batched backtrack regressed? {backtrack_batched_s:.3f}s " \
+                f"vs scalar {backtrack_s:.3f}s at {n_procs} procs"
 
         # -- streamed shard merge ---------------------------------------
         res_sh = simulate(psg, n_procs, straggle, shards=8)

@@ -58,6 +58,16 @@ def __dir__():
     return __all__
 
 
+# `backtrack` is the one export whose name collides with its defining
+# submodule.  A direct `import repro.core.backtrack` binds the *module*
+# onto this package, and because the attribute then exists, __getattr__
+# never fires and `from repro.core import backtrack` hands back the
+# module instead of the function — silently, and dependent on which
+# import ran first.  Pin the function eagerly (the submodule is pure
+# numpy, so this costs nothing and keeps the jax-needing channels lazy).
+from repro.core.backtrack import backtrack  # noqa: E402
+
+
 if TYPE_CHECKING:                     # static analyzers see eager imports
     from repro.core.backtrack import (Path, backtrack, backtrack_batched,
                                       backtrack_one, backtrack_scalar,

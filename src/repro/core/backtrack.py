@@ -467,15 +467,19 @@ def backtrack(ppg: PPG, non_scalable: Sequence[NonScalable],
     """Algorithm 1 Main(): non-scalable starts first, then unscanned
     abnormal vertices.
 
-    ``mode``: "batched" (the frontier-batched engine), "scalar" (the
-    per-start reference walk), or "auto" (default — batched; it already
-    degrades to the scalar walk per path when sequential pruning demands
-    it).  All modes return identical paths."""
+    ``mode``: "scalar" (the per-start reference walk), "batched" (the
+    frontier-batched engine, opt-in), or "auto" (default — scalar).
+    Batched was the "auto" pick while the scalar walk's per-step
+    scanned-set copies went quadratic; with the non-copying union view
+    the scalar walk wins or ties across BENCH_graph_scale.json
+    (0.62-1.12x), so the simpler engine is the default and batched is
+    kept for workloads with very many long disjoint walks.  All modes
+    return identical paths."""
     if mode not in BACKTRACK_MODES:
         raise ValueError(f"mode must be one of {BACKTRACK_MODES}: {mode!r}")
-    if mode == "scalar":
-        return backtrack_scalar(ppg, non_scalable, abnormal)
-    return backtrack_batched(ppg, non_scalable, abnormal)
+    if mode == "batched":
+        return backtrack_batched(ppg, non_scalable, abnormal)
+    return backtrack_scalar(ppg, non_scalable, abnormal)
 
 
 def _anomaly_score(ppg: PPG, node: Node,

@@ -223,20 +223,39 @@ if HAS_JAX:
         step_time = jnp.where(step_time > 0.0, step_time, 1e-12)
         return _median_flags_topk(t, abnorm_thd, min_share, step_time, k)
 
-    @partial(jax.jit, static_argnums=(5,))
-    def _abnormal_topk_blocks_live_kernel(ts, live, top_idx, abnorm_thd,
-                                          min_share, k):
-        """Degraded-fleet variant: gather only LIVE rows on the device.
+    @partial(jax.jit, static_argnums=(6,))
+    def _abnormal_topk_blocks_live_kernel(ts, live, valid, top_idx,
+                                          abnorm_thd, min_share, k):
+        """Degraded-fleet variant: gather LIVE rows at a FIXED shape.
 
-        ``live`` holds the live global row indices (monitor fleets with
-        dead/stale hosts).  Masked rows are excluded by the gather — not
-        zeroed — so the step time, the cross-process median and the flag
-        matrix are exactly those of a store that never contained the
-        dead rows (the median counts zeros; zeroing would poison it)."""
-        t = jnp.concatenate(ts, axis=0)[live]         # (n_live, V)
-        step_time = t[:, top_idx].sum(axis=1).max()
+        ``live`` holds the live global row indices PADDED to the fleet
+        size P (pad entries repeat row 0); ``valid`` marks the real ones.
+        The padded gather keeps every traced shape a function of P alone,
+        so a flapping host — a different live count every detect call —
+        reuses one compiled executable instead of retracing per live-set
+        size.  Semantics still match a store that never contained the
+        dead rows: the median sorts dead rows to +inf and reads the two
+        live middle order statistics (zeroing would poison the count),
+        and dead rows are zeroed/mask-excluded everywhere magnitudes
+        matter (step time, flags, scores)."""
+        t = jnp.concatenate(ts, axis=0)[live]         # (P, V), P static
+        vcol = valid[:, None]
+        n_live = jnp.maximum(valid.sum(), 1)
+        step_time = jnp.where(valid, t[:, top_idx].sum(axis=1), 0.0).max()
         step_time = jnp.where(step_time > 0.0, step_time, 1e-12)
-        return _median_flags_topk(t, abnorm_thd, min_share, step_time, k)
+        # masked median == numpy's over the live subset: dead rows sort
+        # to the bottom, the middle pair indexes only live entries
+        srt = jnp.sort(jnp.where(vcol, t, jnp.inf), axis=0)
+        lo = jnp.take(srt, (n_live - 1) // 2, axis=0)
+        hi = jnp.take(srt, n_live // 2, axis=0)
+        typical = 0.5 * (lo + hi)
+        tm = jnp.where(vcol, t, 0.0)
+        flags = _abnormal_flags(tm, typical, abnorm_thd, min_share,
+                                step_time) & vcol
+        score = jnp.where(flags, tm - typical, -jnp.inf)
+        flat = score.T.reshape(-1)                    # vid-major
+        order = jnp.argsort(-flat, stable=True)[:k]
+        return order, flat[order], flags.sum(), typical
 
 
 def _precision():
@@ -347,10 +366,14 @@ def abnormal_topk_view(view, n_vertices: int, top: Sequence[int],
     ``(vids, procs, typical, n_flagged)`` like :func:`abnormal_topk`.
 
     ``live_rows``: optional live global row indices (degraded fleets).
-    The gather runs on the device and the returned ``procs`` index INTO
-    ``live_rows`` (the caller maps back to global procs), matching the
-    host path's row-subset semantics."""
+    The gather runs on the device at a shape PADDED to the fleet size
+    (pad rows masked out), so varying live counts — a flapping host —
+    hit one compiled executable instead of retracing per live-set size.
+    The returned ``procs`` index INTO ``live_rows`` (the caller maps
+    back to global procs), matching the host path's row-subset
+    semantics."""
     dtype, ctx = _precision()
+    n_procs = view.n_procs
     with ctx:
         view.refresh(n_vertices, dtype)
         ts = tuple(view.time_blocks())
@@ -358,13 +381,15 @@ def abnormal_topk_view(view, n_vertices: int, top: Sequence[int],
         if live_rows is None:
             order, _, count, typical = _abnormal_topk_blocks_kernel(
                 ts, top_d, float(abnorm_thd), float(min_share), int(k))
-            n_procs = view.n_procs
         else:
-            live = jnp.asarray(np.asarray(live_rows, np.int32))
+            live = np.zeros(n_procs, np.int32)
+            valid = np.zeros(n_procs, bool)
+            n_live = int(len(live_rows))
+            live[:n_live] = np.asarray(live_rows, np.int32)
+            valid[:n_live] = True
             order, _, count, typical = _abnormal_topk_blocks_live_kernel(
-                ts, live, top_d, float(abnorm_thd), float(min_share),
-                int(k))
-            n_procs = int(len(live_rows))
+                ts, jnp.asarray(live), jnp.asarray(valid), top_d,
+                float(abnorm_thd), float(min_share), int(k))
         n_flagged = int(count)
         order = np.asarray(order[:min(int(k), n_flagged)])
         typical = np.asarray(typical)

@@ -120,6 +120,7 @@ class Cell:
 def build_cell(arch: str, shape_name: str, mesh: Mesh, *,
                run: Optional[RunConfig] = None,
                cfg: Optional[ArchConfig] = None,
+               shape: Optional[ShapeConfig] = None,
                donate: bool = True,
                options: Optional[Dict[str, bool]] = None) -> Cell:
     """Assemble the lowerable step for one cell (raises if inapplicable).
@@ -128,8 +129,12 @@ def build_cell(arch: str, shape_name: str, mesh: Mesh, *,
       * ``gather_weights`` — ZeRO-3-style FSDP gather-at-use;
       * ``seq_shard``      — sequence parallelism: residual-stream
         activations sharded on 'model' between blocks.
+
+    ``shape`` overrides the ``SHAPES[shape_name]`` registry lookup — the
+    scenario recorder lowers smoke-scale cells (tiny seq/batch on host
+    devices) whose collective MIX still matches the production shape's.
     """
-    shape = SHAPES[shape_name]
+    shape = SHAPES[shape_name] if shape is None else shape
     cfg = cfg if cfg is not None else get_config(arch)
     ok, why = shape_applicable(cfg, shape)
     if not ok:

@@ -1,0 +1,33 @@
+"""Ground-truth scenario bank: real-trace PPGs with injected root causes.
+
+Public API (all jax-free at runtime; recording new traces needs jax —
+``python -m repro.scenarios.record``):
+
+  * :data:`SCENARIOS` / :func:`get_scenario` — the bank;
+  * :class:`Scenario` / :class:`GroundTruth` / :class:`ScenarioResult`;
+  * :func:`run_and_score` / :func:`score_result` / :class:`Score`;
+  * :class:`StepTrace` / :func:`load_trace` / :func:`list_traces` /
+    :func:`instantiate_psg` — the committed-trace layer;
+  * the declarative fault kinds in :mod:`repro.scenarios.faults`.
+"""
+from repro.scenarios.bank import (SCENARIOS, SMOKE_SCENARIOS, GroundTruth,
+                                  Scenario, ScenarioResult, get_scenario)
+from repro.scenarios.faults import (FAULT_KINDS, BatchSkew, DataStall, Fault,
+                                    FaultPlan, MoEImbalance, PipelineBubble,
+                                    ProcSpec, SerialFraction, VertexSel)
+from repro.scenarios.score import (Score, run_and_score, score_nodes,
+                                   score_result)
+from repro.scenarios.source import (CollectiveSpec, GroupPattern, StepTrace,
+                                    classify_groups, instantiate_psg,
+                                    list_traces, load_trace)
+
+__all__ = [
+    "SCENARIOS", "SMOKE_SCENARIOS", "GroundTruth", "Scenario",
+    "ScenarioResult", "get_scenario",
+    "FAULT_KINDS", "BatchSkew", "DataStall", "Fault", "FaultPlan",
+    "MoEImbalance", "PipelineBubble", "ProcSpec", "SerialFraction",
+    "VertexSel",
+    "Score", "run_and_score", "score_nodes", "score_result",
+    "CollectiveSpec", "GroupPattern", "StepTrace", "classify_groups",
+    "instantiate_psg", "list_traces", "load_trace",
+]

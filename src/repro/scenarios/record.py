@@ -1,0 +1,202 @@
+"""Record real-model step traces for the scenario bank (needs jax).
+
+``python -m repro.scenarios.record [names...]`` profiles jitted train /
+decode steps of zoo models on forced host devices and writes committed
+:class:`~repro.scenarios.source.StepTrace` JSON under
+``scenarios/traces/`` — the bank then replays them without jax.
+
+Per trace:
+
+  * ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` is set BEFORE
+    the first jax import (the ``launch/scaling_profile.py`` idiom) so a
+    CPU-only host lowers genuinely multi-device GSPMD programs;
+  * :class:`~repro.core.profiler.GraphProfiler` samples the real step —
+    train state / KV cache stay RESIDENT in the profiler cell between
+    steps (``_RESIDENT``), so re-recording reuses warm state instead of
+    re-initializing per call;
+  * the sharded step is lowered through
+    :func:`repro.launch.shardings.build_cell` (a smoke-scale ``shape``
+    override keeps compile time sane) and its compiled HLO walked with
+    :func:`~repro.core.hlo_walk.analyze_hlo` /
+    :func:`~repro.core.hlo.parse_collectives`; replica groups are
+    classified into scale-free patterns (:func:`classify_groups`) and
+    aggregated per (kind, pattern) into :class:`CollectiveSpec` rows.
+"""
+from __future__ import annotations
+
+import os
+
+N_DEVICES = int(os.environ.get("SCALANA_RECORD_DEVICES", "8"))
+os.environ.setdefault(                         # before the first jax import
+    "XLA_FLAGS", f"--xla_force_host_platform_device_count={N_DEVICES}")
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke
+from repro.configs.base import RunConfig, ShapeConfig
+from repro.core.hlo import parse_collectives
+from repro.core.profiler import GraphProfiler
+from repro.distributed import axes as ax
+from repro.launch.mesh import make_host_mesh
+from repro.launch.shardings import build_cell
+from repro.models.api import build_model
+from repro.optim.adamw import adamw_init
+from repro.optim.schedule import constant
+from repro.scenarios.source import (CollectiveSpec, GroupPattern, StepTrace,
+                                    classify_groups, save_trace)
+from repro.training.trainer import TrainState, make_train_step
+
+# profile state resident between steps / between record calls: one warm
+# (profiler, step args) cell per (arch, kind), the InferenceCache idiom —
+# a second record of the same trace reuses the jitted step and state
+_RESIDENT: Dict[Tuple[str, str], tuple] = {}
+
+PROFILE_STEPS = 4
+SAMPLE_EVERY = 2
+
+
+def _collective_specs(hlo_text: str, n_devices: int) -> List[CollectiveSpec]:
+    """Compiled HLO -> aggregated per-(kind, pattern) collective rows."""
+    buckets: Dict[tuple, CollectiveSpec] = {}
+    for order, op in enumerate(parse_collectives(hlo_text)):
+        if op.p2p_pairs:
+            pattern = GroupPattern("ring")
+        else:
+            pattern = classify_groups(op.replica_groups or [], n_devices)
+        key = (op.kind, pattern.layout, pattern.size)
+        spec = buckets.get(key)
+        if spec is None:
+            buckets[key] = CollectiveSpec(kind=op.kind, bytes=float(op.bytes),
+                                          count=1, pattern=pattern,
+                                          order=order)
+        else:
+            spec.bytes += float(op.bytes)
+            spec.count += 1
+    return sorted(buckets.values(), key=lambda c: c.order)
+
+
+def _profile(key: Tuple[str, str], make_cell) -> GraphProfiler:
+    """Run PROFILE_STEPS through a resident profiler cell."""
+    cell = _RESIDENT.get(key)
+    if cell is None:
+        cell = _RESIDENT[key] = make_cell()
+    prof, step_args, advance = cell
+    for _ in range(PROFILE_STEPS):
+        step_args = advance(prof, step_args)
+    _RESIDENT[key] = (prof, step_args, advance)
+    return prof
+
+
+def record_train(name: str, arch: str, *, model_axis: int = 2) -> StepTrace:
+    cfg = get_smoke(arch).replace(remat=False)
+    mesh = make_host_mesh(model_axis=model_axis)
+    run = RunConfig(arch=arch)
+    B, S = 4, 32
+
+    def make_cell():
+        model = build_model(cfg)
+        step_fn = make_train_step(model, run, constant(1e-3))
+        with ax.use_rules(mesh):
+            params = model.init(jax.random.PRNGKey(0))
+            state = TrainState(params=params, opt=adamw_init(params),
+                               residual=None, step=jnp.zeros((), jnp.int32))
+        batch = {"tokens": jnp.ones((B, S + 1), jnp.int32)}
+        prof = GraphProfiler(step_fn, (state, batch),
+                             sample_every=SAMPLE_EVERY)
+
+        def advance(prof, args):
+            state, batch = args
+            with ax.use_rules(mesh):
+                state, _ = prof.step(state, batch)
+            return (state, batch)
+
+        return prof, (state, batch), advance
+
+    prof = _profile((arch, "train"), make_cell)
+    # collective mix of the SHARDED step, lowered through launch/shardings
+    shape = ShapeConfig(name="train_smoke", seq_len=S, global_batch=B,
+                        kind="train")
+    cell = build_cell(arch, "train_4k", mesh, cfg=cfg, shape=shape,
+                      donate=False)
+    hlo = cell.lower().compile().as_text()
+    perf = prof.perf_vectors()
+    return StepTrace(
+        name=name, arch=arch, kind="train", psg=prof.psg,
+        base={vid: float(v.time) for vid, v in perf.items()},
+        collectives=_collective_specs(hlo, len(jax.devices())),
+        recorded_devices=len(jax.devices()),
+        mesh={k: int(v) for k, v in mesh.shape.items()},
+        meta={"sample_every": SAMPLE_EVERY, "profile_steps": PROFILE_STEPS,
+              "batch": B, "seq": S})
+
+
+def record_decode(name: str, arch: str, *, model_axis: int = 2) -> StepTrace:
+    cfg = get_smoke(arch).replace(remat=False)
+    mesh = make_host_mesh(model_axis=model_axis)
+    B, S, PROMPT = 4, 16, 8
+
+    def make_cell():
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        toks = jnp.ones((B, PROMPT), jnp.int32)
+        _, cache = model.prefill(params, {"tokens": toks}, S)
+
+        def serve_step(p, c, tok):
+            return model.decode_step(p, c, tok)
+
+        tok = jnp.ones((B, 1), jnp.int32)
+        prof = GraphProfiler(serve_step, (params, cache, tok),
+                             sample_every=SAMPLE_EVERY)
+
+        def advance(prof, args):
+            params, cache, tok = args
+            _, cache = prof.step(params, cache, tok)
+            return (params, cache, tok)
+
+        return prof, (params, cache, tok), advance
+
+    prof = _profile((arch, "decode"), make_cell)
+    shape = ShapeConfig(name="decode_smoke", seq_len=S, global_batch=B,
+                        kind="decode")
+    cell = build_cell(arch, "decode_32k", mesh, cfg=cfg, shape=shape,
+                      donate=False)
+    hlo = cell.lower().compile().as_text()
+    perf = prof.perf_vectors()
+    return StepTrace(
+        name=name, arch=arch, kind="decode", psg=prof.psg,
+        base={vid: float(v.time) for vid, v in perf.items()},
+        collectives=_collective_specs(hlo, len(jax.devices())),
+        recorded_devices=len(jax.devices()),
+        mesh={k: int(v) for k, v in mesh.shape.items()},
+        meta={"sample_every": SAMPLE_EVERY, "profile_steps": PROFILE_STEPS,
+              "batch": B, "cache_len": S, "prompt": PROMPT})
+
+
+RECORDERS = {
+    "tinyllama_train": lambda: record_train("tinyllama_train",
+                                            "tinyllama-1.1b"),
+    "moe_train": lambda: record_train("moe_train", "moonshot-v1-16b-a3b"),
+    "tinyllama_decode": lambda: record_decode("tinyllama_decode",
+                                              "tinyllama-1.1b"),
+}
+
+
+def main(names=None) -> None:
+    for name in (names or sorted(RECORDERS)):
+        trace = RECORDERS[name]()
+        path = save_trace(trace)
+        measured = len(trace.base)
+        print(f"recorded {name}: {len(trace.psg.vertices)} vertices "
+              f"({measured} measured), {len(trace.collectives)} collective "
+              f"groups, step={trace.step_time() * 1e3:.1f}ms -> {path}")
+
+
+if __name__ == "__main__":
+    import sys
+    main(sys.argv[1:] or None)

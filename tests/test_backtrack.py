@@ -189,6 +189,17 @@ def test_batched_equals_scalar_overlapping_straggler_block():
             _paths_key(backtrack_scalar(res.ppg, [], ab)), trial
 
 
+def test_backtrack_export_survives_submodule_import():
+    # a direct `import repro.core.backtrack` (as repro.scenarios.bank does)
+    # must not shadow the package-level function export with the submodule
+    import importlib
+    import sys
+
+    importlib.import_module("repro.core.backtrack")
+    from repro.core import backtrack as fn
+    assert callable(fn) and fn is sys.modules["repro.core.backtrack"].backtrack
+
+
 def test_backtrack_mode_dispatch():
     g, (c0, c1, p2p, c2, ar) = _pipeline_psg()
     res = simulate(g, 8, lambda p, vid: 0.01, inject={(4, c0): 0.5})

@@ -1,0 +1,67 @@
+"""Scenario smoke: the ground-truth bank's fast end-to-end gate.
+
+``make scenario-smoke`` (part of ``make check``) replays the bank's two
+fastest scenarios (``repro.scenarios.SMOKE_SCENARIOS``) from their
+committed real-model traces at 512 and 2048 processes, scores the full
+detect + backtrack + root-cause pipeline against each scenario's
+machine-checkable ground truth, and asserts the declared accuracy
+floors.  The per-cell rows are written to ``scenario-accuracy.csv`` (CI
+uploads it as an artifact; the full bank x scale x backend table lives
+in ``benchmarks/bench_casestudy.py``).
+
+jax-free by construction (numpy backend over committed JSON traces), so
+the jax-absent CI job runs it unchanged; exits non-zero on any floor
+violation, failing ``make check`` loudly.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+SCALES = (512, 2048)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="scenario-accuracy.csv",
+                    help="where to write the accuracy table")
+    ap.add_argument("--scales", type=int, nargs="*", default=list(SCALES))
+    args = ap.parse_args(argv)
+
+    from repro.scenarios import SMOKE_SCENARIOS, get_scenario, run_and_score
+
+    rows = ["scenario,n_procs,backend,channel,precision,recall,"
+            "path_hit_rate,n_reported,n_truth,seconds,passes"]
+    ok = True
+    for name in SMOKE_SCENARIOS:
+        sc = get_scenario(name)
+        for n in args.scales:
+            t0 = time.perf_counter()
+            res, score = run_and_score(sc, n, backend="numpy")
+            dt = time.perf_counter() - t0
+            passes = score.passes(sc.truth)
+            ok &= passes
+            rows.append(
+                f"{name},{n},numpy,{res.channel},{score.precision:.3f},"
+                f"{score.recall:.3f},{score.path_hit_rate:.3f},"
+                f"{score.n_reported},{score.n_truth},{dt:.3f},{passes}")
+            verdict = "ok" if passes else "FLOOR VIOLATION"
+            print(f"[{name} @ {n}] {score.row()}  {verdict}")
+            if not passes:
+                print(f"  floors: precision>={sc.truth.min_precision} "
+                      f"recall>={sc.truth.min_recall} "
+                      f"path_hit>={sc.truth.min_path_hit}", file=sys.stderr)
+
+    with open(args.out, "w") as f:
+        f.write("\n".join(rows) + "\n")
+    if not ok:
+        print("scenario smoke FAILED: accuracy under declared floors",
+              file=sys.stderr)
+        return 1
+    print(f"\nscenario smoke OK (table -> {args.out})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
