@@ -2,7 +2,7 @@ PYTHONPATH := src:.
 export PYTHONPATH
 
 .PHONY: check test smoke bench bench-smoke docs-check chaos-smoke \
-	scenario-smoke
+	scenario-smoke scenario-smoke-jax
 
 test:
 	python -m pytest -x -q
@@ -32,6 +32,13 @@ chaos-smoke:
 # (uploaded as a CI artifact)
 scenario-smoke:
 	python tools/scenario_smoke.py
+
+# the same bank scenarios scored through the jitted jax detectors (CI
+# jax job only); writes scenario-accuracy-jax.csv (uploaded as its own
+# artifact) — a jax-vs-numpy accuracy divergence fails there
+scenario-smoke-jax:
+	python tools/scenario_smoke.py --backend jax \
+		--out scenario-accuracy-jax.csv
 
 # tier-1 tests + the graph-core smoke benchmark (perf regressions fail
 # loudly) + executable documentation + the monitor chaos smoke + the

@@ -38,7 +38,12 @@ scale:
     dependence is stored as participant groups, so comm bytes grow O(P),
     not O(P²) (asserted);
   * counter storage: the column-sparse layout vs the dense (P, V)
-    equivalent (asserted smaller).
+    equivalent (asserted smaller);
+  * ``socket_ingest/*`` rows — 512/2048/4096 loopback producers
+    streaming versioned wire frames through shared real TCP connections
+    into one ``SocketServer`` + resident ``Monitor``, asserted bit-
+    identical to one-shot detection, with the wire-level delta
+    compression ratio priced against a full-row baseline.
 
 ``run`` returns the rows as dicts; ``benchmarks/run.py`` snapshots them to
 ``BENCH_graph_scale.json`` so the perf trajectory is machine-readable
@@ -167,7 +172,9 @@ def bench_monitor(psg, target: int, straggler: int, n_procs: int,
     from repro.monitor import (FaultyTransport, Monitor, QueueTransport,
                                ShardProducer)
 
-    n_hosts = max(2, min(128, n_procs // 64 or 2))
+    # 512-host ceiling (was 128): 16 procs/host at the top scale, the
+    # fleet shape the socket ingest bench (below) extends further
+    n_hosts = max(2, min(512, n_procs // 16 or 2))
     n_faulty = max(1, n_hosts // 10)
     ranges = shard_ranges(n_procs, n_hosts)
 
@@ -218,6 +225,180 @@ def bench_monitor(psg, target: int, straggler: int, n_procs: int,
         assert got == ab_ref, \
             f"monitor ({variant}) diverged from one-shot: {got} != {ab_ref}"
     return results["clean"], results["faulty"], n_hosts, n_faulty
+
+
+def bench_socket_ingest(n_producers: int, *, rounds: int = 3,
+                        backend: str = "numpy", n_comp: int = 12,
+                        conn_cap: int = 128,
+                        deadline_s: float = 300.0) -> Dict:
+    """Multi-thousand-host fan-in over REAL loopback sockets.
+
+    ``n_producers`` single-proc hosts stream ``rounds`` flushes — one
+    full seed round, then steady-state single-column drifts — through at
+    most ``conn_cap`` shared ``SocketTransport`` connections into one
+    ``SocketServer`` + resident ``Monitor``.  The streamed store and
+    detection are asserted bit-identical to the one-shot run on the
+    producers' own store, and the wire-level delta compression is priced
+    against a full-row baseline: a second ``DeltaEncoder(compress=False)``
+    encodes the SAME deltas (resends included) purely to count bytes.
+    Returns the metrics row dict; ``socket_ingest_s`` covers flush +
+    drain for all rounds (including the baseline pricing overhead, so
+    ``socket_deltas_per_s`` is a lower bound on ingest throughput)."""
+    from repro.core.graph import PPG
+    from repro.core.shard import ShardedStore, shard_ranges
+    from repro.monitor import (Monitor, ProducerLink, ShardProducer,
+                               SocketServer, SocketTransport, stores_equal)
+    from repro.monitor.chaos import _ab_key, build_chaos_psg
+    from repro.monitor.producer import ShardDelta
+    from repro.monitor.transport import Transport
+    from repro.monitor.wire import DeltaEncoder, encode_message
+
+    class CountingTransport(Transport):
+        """Forwards to a shared socket transport; prices the SAME deltas
+        as full rows so the compression ratio is measured on identical
+        traffic."""
+
+        def __init__(self, inner):
+            self.inner = inner
+            self.baseline = DeltaEncoder(compress=False)
+            self.full_bytes = 0
+
+        def send(self, msg):
+            self.inner.send(msg)        # raises on failure: not priced
+            if isinstance(msg, ShardDelta):
+                self.full_bytes += len(encode_message(msg, self.baseline))
+
+        def recv(self, max_messages=None):
+            return self.inner.recv(max_messages)
+
+        def pending(self):
+            return self.inner.pending()
+
+    psg = build_chaos_psg(n_comp)
+    V = len(psg.vertices)
+    n_procs = n_producers                 # one proc per host: fleet fan-in
+    ranges = shard_ranges(n_procs, n_producers)
+    comps = [v.vid for v in psg.vertices if v.kind == COMP]
+    target = comps[len(comps) // 2]
+    straggler = n_procs // 3
+
+    server = SocketServer().start()
+    monitor = Monitor(psg, ranges, server, detect_every=None,
+                      backend=backend)
+    prod_store = ShardedStore(ranges, V)
+    n_conns = min(conn_cap, n_producers)
+    conns = [SocketTransport(server.address, seed=i) for i in range(n_conns)]
+    counting = [CountingTransport(tr) for tr in conns]
+    producers: List = []
+    links: List = []
+    try:
+        for h in range(n_producers):
+            p = ShardProducer(h, prod_store.shards[h],
+                              counting[h % n_conns], max_retries=4,
+                              base_backoff=0.001, max_backoff=0.01)
+            producers.append(p)
+            links.append(ProducerLink(p, conns[h % n_conns],
+                                      resend_after=2.0))
+
+        def drain(deadline):
+            while True:
+                if all(monitor.high[h] >= producers[h].seq
+                       and not monitor.parked[h]
+                       for h in range(n_producers)):
+                    return
+                if time.monotonic() > deadline:
+                    raise RuntimeError(
+                        f"socket ingest did not converge at "
+                        f"{n_producers} producers: "
+                        f"applied={sum(monitor.high.values())}/"
+                        f"{sum(p.seq for p in producers)} "
+                        f"server={server.stats()}")
+                monitor.poll()
+                server.send_acks({h: monitor.acked_seq(h)
+                                  for h in range(n_producers)})
+                for tr in conns:
+                    tr.recv()             # pump acks -> prune unacked
+                for link in links:
+                    link.tick()
+                time.sleep(0.001)
+
+        deadline = time.monotonic() + deadline_s
+        marks = []                        # (wire, fullrow) after each round
+        t0 = time.perf_counter()
+        for r in range(1, rounds + 1):
+            if r == 1:                    # full seed: every column, once
+                for vid in range(1, V):
+                    t = np.full(n_procs, 0.01 + 0.001 * vid)
+                    if vid == target:
+                        t[straggler] += 0.05
+                    prod_store.set_column(vid, t, samples=1,
+                                          counters={"PAPI_TOT_CYC":
+                                                    1e6 * vid})
+            else:                         # steady state: one column drifts
+                t = np.full(n_procs, 0.01 + 0.001 * target + 1e-4 * r)
+                t[straggler] += 0.05
+                prod_store.set_column(target, t, samples=1)
+            for p in producers:
+                p.flush(heartbeat=False)
+            drain(deadline)
+            marks.append((sum(tr.stats["delta_bytes"] for tr in conns),
+                          sum(ct.full_bytes for ct in counting)))
+        socket_ingest_s = time.perf_counter() - t0
+        wire_bytes, fullrow_bytes = marks[-1]
+        steady_wire = wire_bytes - marks[0][0]
+        steady_full = fullrow_bytes - marks[0][1]
+
+        # ack-prune tail (not timed): deliver the final acks
+        tail = time.monotonic() + 30.0
+        while any(p.unacked for p in producers) \
+                and time.monotonic() < tail:
+            server.send_acks({h: monitor.acked_seq(h)
+                              for h in range(n_producers)})
+            for tr in conns:
+                tr.recv()
+            time.sleep(0.002)
+        assert not any(p.unacked for p in producers), \
+            "acks did not prune the producers' unacked buffers"
+
+        report = monitor.force_detect()
+        ref_ppg = PPG(psg, n_procs, prod_store)
+        ab_ref = detect_abnormal(ref_ppg, backend=backend)
+        paths_ref = backtrack(ref_ppg, [], ab_ref)
+        assert [_ab_key(a) for a in report.abnormal] \
+            == [_ab_key(a) for a in ab_ref], \
+            "streamed detection diverged from one-shot"
+        assert [(p.start_reason, p.nodes) for p in report.paths] \
+            == [(p.start_reason, p.nodes) for p in paths_ref], \
+            "streamed backtrack diverged from one-shot"
+        assert stores_equal(monitor.store, prod_store, V), \
+            "streamed store not bit-identical to the producers' store"
+    finally:
+        for tr in conns:
+            tr.close()
+        server.stop()
+
+    deltas = sum(p.seq for p in producers)
+    wire_ratio = wire_bytes / max(fullrow_bytes, 1)
+    steady_ratio = steady_wire / max(steady_full, 1)
+    # the acceptance bar: compressed wire traffic measurably below the
+    # full-row baseline over the whole run (the steady-state ratio is
+    # far smaller still — one changed column per row)
+    assert wire_ratio < 0.9, \
+        f"wire compression not measurably below full rows: {wire_ratio:.2f}"
+    return {
+        "name": f"socket_ingest/{n_producers}hosts",
+        "socket_producers": n_producers,
+        "socket_conns": n_conns,
+        "socket_rounds": rounds,
+        "socket_deltas": deltas,
+        "socket_ingest_s": socket_ingest_s,
+        "socket_deltas_per_s": deltas / max(socket_ingest_s, 1e-9),
+        "socket_wire_bytes": wire_bytes,
+        "socket_fullrow_bytes": fullrow_bytes,
+        "socket_wire_ratio": wire_ratio,
+        "socket_steady_ratio": steady_ratio,
+        "detect_backend": backend,
+    }
 
 
 def run(smoke: bool = False) -> List[Dict]:
@@ -487,6 +668,26 @@ def run(smoke: bool = False) -> List[Dict]:
              f"counter_bytes={counter_nbytes};"
              f"counter_dense_equiv_bytes={counter_dense};"
              f"paths={len(paths)};root_cause_found={found}")
+
+    # -- real-socket ingest fan-in ------------------------------------
+    # 512/2048/4096 loopback producers (8/32 in smoke) through <= 128
+    # shared connections; one full seed round, then steady-state drift
+    # rounds.  Streamed store + detection asserted bit-identical to the
+    # one-shot run; the delta-compression ratio vs the full-row wire
+    # baseline lands in BENCH_graph_scale.json.
+    socket_scales = SMOKE_SCALES if smoke else (512, 2048, 4096)
+    for n_hosts in socket_scales:
+        srow = bench_socket_ingest(n_hosts, backend=detect_backend)
+        rows.append(srow)
+        emit(srow["name"], srow["socket_ingest_s"] * 1e6,
+             f"producers={srow['socket_producers']};"
+             f"conns={srow['socket_conns']};"
+             f"deltas={srow['socket_deltas']};"
+             f"deltas_per_s={srow['socket_deltas_per_s']:.0f};"
+             f"wire_bytes={srow['socket_wire_bytes']};"
+             f"fullrow_bytes={srow['socket_fullrow_bytes']};"
+             f"wire_ratio={srow['socket_wire_ratio']:.3f};"
+             f"steady_ratio={srow['socket_steady_ratio']:.3f}")
     return rows
 
 

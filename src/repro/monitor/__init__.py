@@ -15,6 +15,15 @@ fault-tolerant service (ROADMAP: "always-on monitor"):
 * :mod:`~repro.monitor.degraded` — live-subfleet PPG compaction.
 * :mod:`~repro.monitor.chaos` — the end-to-end chaos harness
   (``chaos_run``), used by tests, ``make chaos-smoke`` and benchmarks.
+* :mod:`~repro.monitor.wire` — the versioned wire protocol: CRC-checked
+  length-prefixed frames plus the delta-compression codec
+  (``DeltaEncoder`` / ``DeltaDecoder`` / ``FrameReader``).
+* :mod:`~repro.monitor.net` — the real-network transport:
+  ``SocketTransport`` (reconnecting TCP client) / ``SocketServer``
+  (aggregator accept/drain loop) / ``SocketChaosProxy`` (real-socket
+  fault injection) and the end-to-end ``socket_chaos_run`` scenario.
+* :mod:`~repro.monitor.clock` — the injectable time seam
+  (``Clock`` / ``SystemClock`` / ``ManualClock``).
 
 Imports stay jax-free (detection backends resolve lazily, exactly as in
 one-shot use).
@@ -22,14 +31,25 @@ one-shot use).
 from repro.monitor.aggregator import (FleetStatus, HostStatus, Monitor,
                                       MonitorReport)
 from repro.monitor.chaos import ChaosResult, build_chaos_psg, chaos_run
+from repro.monitor.clock import Clock, ManualClock, SystemClock, as_clock
 from repro.monitor.degraded import live_subppg, remap_paths
+from repro.monitor.net import (ProducerLink, SocketChaosProxy, SocketServer,
+                               SocketTransport, socket_chaos_run,
+                               stores_equal)
 from repro.monitor.producer import Heartbeat, ShardDelta, ShardProducer
 from repro.monitor.transport import (FaultyTransport, QueueTransport,
                                      Transport, TransportError)
+from repro.monitor.wire import (Ack, DeltaDecoder, DeltaEncoder, FrameReader,
+                                WireError, decode_message, encode_frame,
+                                encode_message)
 
 __all__ = [
-    "ChaosResult", "FaultyTransport", "FleetStatus", "Heartbeat",
-    "HostStatus", "Monitor", "MonitorReport", "QueueTransport",
-    "ShardDelta", "ShardProducer", "Transport", "TransportError",
-    "build_chaos_psg", "chaos_run", "live_subppg", "remap_paths",
+    "Ack", "ChaosResult", "Clock", "DeltaDecoder", "DeltaEncoder",
+    "FaultyTransport", "FleetStatus", "FrameReader", "Heartbeat",
+    "HostStatus", "ManualClock", "Monitor", "MonitorReport", "ProducerLink",
+    "QueueTransport", "ShardDelta", "ShardProducer", "SocketChaosProxy",
+    "SocketServer", "SocketTransport", "SystemClock", "Transport",
+    "TransportError", "WireError", "as_clock", "build_chaos_psg",
+    "chaos_run", "decode_message", "encode_frame", "encode_message",
+    "live_subppg", "remap_paths", "socket_chaos_run", "stores_equal",
 ]

@@ -53,9 +53,12 @@ from repro.core.detect import Abnormal, detect_abnormal
 from repro.core.graph import CommIndex, PPG, PSG
 from repro.core.report import render_report
 from repro.core.shard import ShardedStore
+from repro.monitor.clock import as_clock
 from repro.monitor.degraded import live_subppg, remap_paths
 from repro.monitor.producer import Heartbeat, ShardDelta
 from repro.monitor.transport import Transport
+from repro.monitor.validate import (fraction, positive_float, positive_int,
+                                    probability)
 
 
 @dataclasses.dataclass
@@ -124,18 +127,27 @@ class Monitor:
         self.ppg = PPG(psg, self.store.n_procs, self.store)
         if comm is not None:
             self.ppg.comm = comm
-        self.detect_every = detect_every
-        self.drift_threshold = drift_threshold
-        self.interval = interval
-        self.stale_after = stale_after
+        self.detect_every = positive_int("detect_every", detect_every,
+                                         allow_none=True)
+        self.drift_threshold = fraction("drift_threshold", drift_threshold,
+                                        allow_none=True)
+        self.interval = positive_float("interval", interval,
+                                       allow_none=True)
+        self.stale_after = positive_float("stale_after", stale_after,
+                                          allow_none=True)
+        if backend not in (None, "numpy", "jax", "auto"):
+            raise ValueError(f"unknown detect backend: {backend!r}; "
+                             f"valid values are 'numpy', 'jax', 'auto'")
         self.backend = backend
-        self.abnorm_thd = abnorm_thd
-        self.min_share = min_share
-        self.top_k = top_k
-        self.max_abnormal = max_abnormal
-        self.max_reports = int(max_reports)
+        self.abnorm_thd = positive_float("abnorm_thd", abnorm_thd)
+        self.min_share = probability("min_share", min_share)
+        self.top_k = positive_int("top_k", top_k)
+        self.max_abnormal = positive_int("max_abnormal", max_abnormal)
+        self.max_reports = positive_int("max_reports", max_reports)
         self.on_report = on_report
-        self.clock = clock
+        # one Clock behind the legacy callable knob (repro.monitor.clock)
+        self._clock = as_clock(clock)
+        self.clock = self._clock.monotonic
         self.title = title
 
         H = len(self.store.shards)
@@ -155,10 +167,12 @@ class Monitor:
         self._last_detect_time = now
 
         self.snapshot_dir = snapshot_dir
-        self.snapshot_every = int(snapshot_every)
+        self.snapshot_every = positive_int("snapshot_every", snapshot_every)
         self._applied_since_snapshot = 0
         self._snap_step = 0
-        self._ckpt = CheckpointManager(snapshot_dir, keep=keep_snapshots) \
+        self._ckpt = CheckpointManager(
+            snapshot_dir, keep=positive_int("keep_snapshots",
+                                            keep_snapshots)) \
             if snapshot_dir else None
 
         self._lock = threading.RLock()

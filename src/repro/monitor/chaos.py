@@ -96,11 +96,17 @@ class ChaosResult:
     duplicates_absorbed: int
     deltas_applied: int
     rounds: int
+    # the socket scenario also proves the stronger invariants; the
+    # queue-transport run leaves them True (they are implied by
+    # abnormal/paths matching on identical stores)
+    store_match: bool = True       # converged store == producers' shards
+    report_match: bool = True      # rendered text == one-shot render
 
     @property
     def converged(self) -> bool:
         return self.abnormal_match and self.paths_match \
-            and self.coverage_stated
+            and self.coverage_stated and self.store_match \
+            and self.report_match
 
 
 def _ab_key(a: Abnormal) -> tuple:

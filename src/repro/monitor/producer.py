@@ -26,7 +26,9 @@ from typing import Callable, Dict, List, Optional
 
 from repro.core.graph import RowBlock
 from repro.core.shard import PerfShard
+from repro.monitor.clock import as_clock
 from repro.monitor.transport import Transport, TransportError
+from repro.monitor.validate import backoff_bounds, non_negative_int
 
 
 @dataclasses.dataclass
@@ -61,14 +63,16 @@ class ShardProducer:
                  max_backoff: float = 1.0,
                  clock: Callable[[], float] = time.monotonic,
                  sleep: Optional[Callable[[float], None]] = None):
-        self.host = int(host)
+        self.host = non_negative_int("host", host)
         self.shard = shard
         self.transport = transport
-        self.max_retries = int(max_retries)
-        self.base_backoff = float(base_backoff)
-        self.max_backoff = float(max_backoff)
-        self.clock = clock
-        self.sleep = sleep if sleep is not None else time.sleep
+        self.max_retries = non_negative_int("max_retries", max_retries)
+        self.base_backoff, self.max_backoff = backoff_bounds(
+            "base_backoff", base_backoff, "max_backoff", max_backoff)
+        # one Clock behind the legacy knob pair (see repro.monitor.clock)
+        self._clock = as_clock(clock, sleep)
+        self.clock = self._clock.monotonic
+        self.sleep = self._clock.sleep
         self.seq = 0                          # last produced delta seq
         self.acked = 0                        # last seq the aggregator owns
         self.unacked: Dict[int, ShardDelta] = {}
@@ -85,7 +89,12 @@ class ShardProducer:
         retried first, in sequence order, so a recovered link drains the
         backlog before new data."""
         for seq in list(self._unsent):
-            if self._send_with_retry(self.unacked[seq]):
+            delta = self.unacked.get(seq)
+            if delta is None:                 # acked mid-drain (a socket
+                if seq in self._unsent:       # send pumps acks inline)
+                    self._unsent.remove(seq)
+                continue
+            if self._send_with_retry(delta) and seq in self._unsent:
                 self._unsent.remove(seq)
         delta = None
         rows = self.shard.dirty_rows()
@@ -141,7 +150,10 @@ class ShardProducer:
         has.  Returns the number of deltas resent."""
         n = 0
         for seq in sorted(self.unacked):
-            if self._send_with_retry(self.unacked[seq]):
+            delta = self.unacked.get(seq)
+            if delta is None:                 # acked mid-replay
+                continue
+            if self._send_with_retry(delta):
                 n += 1
                 if seq in self._unsent:
                     self._unsent.remove(seq)

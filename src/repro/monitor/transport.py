@@ -106,7 +106,9 @@ class FaultyTransport(Transport):
         self.stats: Dict[str, int] = collections.Counter()
         self._held: List[List[Any]] = []       # [countdown, msg]
         self._sends = 0
-        self._lock = threading.Lock()
+        # re-entrant: a socket inner transport's reconnect hook replays
+        # unacked deltas through THIS send while it holds the lock
+        self._lock = threading.RLock()
 
     # -- the faulty side -----------------------------------------------
     def send(self, msg: Any) -> None:

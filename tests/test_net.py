@@ -1,0 +1,370 @@
+"""Real-socket transport: loopback end-to-end, reconnect, chaos proxy.
+
+The acceptance contract (ISSUE 8): producers streaming over REAL TCP —
+through a fault-injecting proxy tearing frames, resetting connections
+and spraying garbage, optionally with the seeded ``FaultyTransport``
+stacked on top — leave the monitor's converged store bit-identical to
+the producers' shards and its rendered report bit-identical to the
+fault-free one-shot run.  Timing logic runs on the injectable clock, so
+nothing here is ``time.sleep``-calibrated except bounded convergence
+deadlines.
+"""
+import random
+import socket
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.inject import simulate
+from repro.core.shard import ShardedStore, shard_ranges
+from repro.monitor import (FaultyTransport, Heartbeat, ManualClock, Monitor,
+                           ProducerLink, ShardProducer, SocketChaosProxy,
+                           SocketServer, SocketTransport, Transport,
+                           TransportError, build_chaos_psg, encode_message,
+                           socket_chaos_run, stores_equal)
+
+DEADLINE = 20.0     # hard cap on any convergence wait (loopback is ~ms)
+
+
+def _fleet(n_procs=8, n_hosts=2, n_comp=6, seed=0):
+    psg = build_chaos_psg(n_comp)
+    V = len(psg.vertices)
+    ranges = shard_ranges(n_procs, n_hosts)
+
+    def base(p, vid):
+        v = psg.vertices[vid]
+        return 0.0 if v.kind == "Comm" else 1.0 + 0.01 * vid
+
+    sim = simulate(psg, n_procs, base, inject={(1, 2): 4.0},
+                   comm_time=lambda *a: 0.05, jitter=0.0, seed=seed,
+                   shards=ranges)
+    return psg, V, ranges, sim.ppg
+
+
+def _converge(monitor, producers, links, server, *, extra=lambda: None,
+              ack=True):
+    """Drive flush/tick/poll until every stream is applied.  ``ack=False``
+    models an aggregator that dies before durably committing anything —
+    producers must keep their unacked buffers."""
+    deadline = time.monotonic() + DEADLINE
+    hosts = list(producers)
+    while not all(monitor.high[h] >= producers[h].seq
+                  and not monitor.parked[h] for h in hosts):
+        assert time.monotonic() < deadline, \
+            (monitor.high, {h: p.seq for h, p in producers.items()},
+             server.stats())
+        extra()
+        for link in links:
+            link.tick()
+        monitor.poll()
+        if ack:
+            server.send_acks({h: monitor.acked_seq(h) for h in hosts})
+        time.sleep(0.002)
+    monitor.poll()
+    if ack:
+        server.send_acks({h: monitor.acked_seq(h) for h in hosts})
+
+
+# ---------------------------------------------------------------------------
+# knob validation (satellite: clear ValueErrors naming the argument)
+# ---------------------------------------------------------------------------
+
+def test_socket_transport_knob_validation():
+    with pytest.raises(ValueError, match="address port"):
+        SocketTransport(("127.0.0.1", 0))       # 0 is not connectable
+    with pytest.raises(ValueError, match="address port"):
+        SocketTransport(("127.0.0.1", 99999))
+    with pytest.raises(ValueError, match="backoff_max.*backoff_base"):
+        SocketTransport(("127.0.0.1", 1234), backoff_base=1.0,
+                        backoff_max=0.5)
+    with pytest.raises(ValueError, match="jitter"):
+        SocketTransport(("127.0.0.1", 1234), jitter=1.5)
+    with pytest.raises(ValueError, match="connect_attempts"):
+        SocketTransport(("127.0.0.1", 1234), connect_attempts=0)
+
+
+def test_monitor_and_producer_knob_validation():
+    psg, V, ranges, _ = _fleet()
+    import repro.monitor.transport as tmod
+    q = tmod.QueueTransport()
+    with pytest.raises(ValueError, match="detect_every"):
+        Monitor(psg, ranges, q, detect_every=0)
+    with pytest.raises(ValueError, match="snapshot_every"):
+        Monitor(psg, ranges, q, snapshot_every=-3)
+    with pytest.raises(ValueError, match="stale_after"):
+        Monitor(psg, ranges, q, stale_after=0.0)
+    with pytest.raises(ValueError, match="drift_threshold"):
+        Monitor(psg, ranges, q, drift_threshold=2.0)
+    with pytest.raises(ValueError, match="backend"):
+        Monitor(psg, ranges, q, backend="cuda")
+    store = ShardedStore(ranges, V)
+    with pytest.raises(ValueError, match="max_backoff.*base_backoff"):
+        ShardProducer(0, store.shards[0], q, base_backoff=2.0,
+                      max_backoff=1.0)
+    with pytest.raises(ValueError, match="max_retries"):
+        ShardProducer(0, store.shards[0], q, max_retries=-1)
+    with pytest.raises(ValueError, match="host"):
+        ShardProducer(-2, store.shards[0], q)
+
+
+def test_chaos_proxy_knob_validation():
+    with pytest.raises(ValueError, match="p_reset"):
+        SocketChaosProxy(("127.0.0.1", 1234), p_reset=-0.1)
+    with pytest.raises(ValueError, match="target port"):
+        SocketChaosProxy(("127.0.0.1", 0))
+    with pytest.raises(ValueError, match="garbage_max"):
+        SocketChaosProxy(("127.0.0.1", 1234), garbage_max=0)
+
+
+# ---------------------------------------------------------------------------
+# reconnect backoff (satellite: deterministic on the clock seam)
+# ---------------------------------------------------------------------------
+
+def _dead_port():
+    s = socket.socket()
+    s.bind(("127.0.0.1", 0))
+    port = s.getsockname()[1]
+    s.close()
+    return port
+
+
+def test_reconnect_backoff_schedule_is_deterministic():
+    """Against a dead port, the connect loop sleeps the exact jittered
+    exponential schedule its seed dictates — asserted on a ManualClock,
+    no real time involved."""
+    clock = ManualClock()
+    tr = SocketTransport(("127.0.0.1", _dead_port()), seed=42,
+                         connect_attempts=4, backoff_base=0.01,
+                         backoff_max=0.04, jitter=0.5, clock=clock,
+                         connect_timeout=0.5)
+    with pytest.raises(TransportError, match="cannot connect"):
+        tr.send(Heartbeat(host=0, seq=0, time=0.0))
+    rng = random.Random(42)
+    want, delay = [], 0.01
+    for _ in range(3):                        # sleeps between 4 attempts
+        want.append(delay * (1.0 + 0.5 * rng.random()))
+        delay = min(2 * delay, 0.04)
+    assert clock.slept == pytest.approx(want)
+    assert tr.stats["connect_failures"] == 4
+
+
+# ---------------------------------------------------------------------------
+# loopback end-to-end
+# ---------------------------------------------------------------------------
+
+def test_clean_loopback_store_bit_identical_and_acked():
+    psg, V, ranges, truth = _fleet()
+    with SocketServer() as srv:
+        mon = Monitor(psg, ranges, srv, comm=truth.comm, detect_every=None,
+                      backend="numpy")
+        prod_store = ShardedStore(ranges, V)
+        producers, links, transports = {}, [], []
+        for h in range(2):
+            tr = SocketTransport(srv.address, seed=h)
+            transports.append(tr)
+            p = ShardProducer(h, prod_store.shards[h], tr)
+            producers[h] = p
+            links.append(ProducerLink(p, tr, resend_after=0.05))
+        for h in range(2):
+            rows = np.arange(prod_store.shards[h].n_procs)
+            prod_store.shards[h].apply_rows(
+                truth.perf.shards[h].extract_rows(rows))
+            producers[h].flush()
+        _converge(mon, producers, links, srv)
+        assert stores_equal(mon.store, prod_store, V)
+        # acks flowed back over the same sockets and pruned the buffers
+        deadline = time.monotonic() + DEADLINE
+        while any(producers[h].acked < producers[h].seq for h in range(2)):
+            assert time.monotonic() < deadline
+            srv.send_acks({h: mon.acked_seq(h) for h in range(2)})
+            for tr in transports:
+                tr.recv()                      # pumps acks
+            time.sleep(0.002)
+        assert all(not producers[h].unacked for h in range(2))
+        for tr in transports:
+            tr.close()
+
+
+def test_server_send_is_not_a_thing():
+    with SocketServer() as srv:
+        with pytest.raises(RuntimeError, match="receive side"):
+            srv.send(Heartbeat(host=0, seq=0, time=0.0))
+
+
+def test_server_resyncs_after_raw_garbage_bytes():
+    """Bytes that never came from our client — the reader walks to the
+    next magic and the following frame still lands."""
+    with SocketServer() as srv:
+        s = socket.create_connection(srv.address)
+        try:
+            hb = encode_message(Heartbeat(host=0, seq=1, time=2.0))
+            s.sendall(b"\x01\xffnot a frame at all" + hb)
+            deadline = time.monotonic() + DEADLINE
+            while srv.pending() == 0:
+                assert time.monotonic() < deadline, srv.stats()
+                time.sleep(0.002)
+            msgs = srv.recv()
+            assert len(msgs) == 1 and isinstance(msgs[0], Heartbeat)
+            assert msgs[0].seq == 1
+            stats = srv.stats()
+            assert stats["resyncs"] >= 1
+            assert stats["skipped_bytes"] >= 20
+        finally:
+            s.close()
+
+
+def test_server_restart_client_reconnects_and_resends_unacked():
+    """Kill the server mid-stream; a fresh one on the same port gets the
+    whole unacked buffer replayed on reconnect and converges."""
+    psg, V, ranges, truth = _fleet()
+    srv1 = SocketServer().start()
+    addr = srv1.address
+    mon1 = Monitor(psg, ranges, srv1, comm=truth.comm, detect_every=None)
+    prod_store = ShardedStore(ranges, V)
+    producers, links = {}, []
+    transports = []
+    for h in range(2):
+        tr = SocketTransport(addr, seed=h, connect_attempts=20,
+                             backoff_base=0.002, backoff_max=0.02,
+                             connect_timeout=1.0, send_timeout=1.0)
+        transports.append(tr)
+        p = ShardProducer(h, prod_store.shards[h], tr, max_retries=10,
+                          base_backoff=0.001, max_backoff=0.01)
+        producers[h] = p
+        links.append(ProducerLink(p, tr, resend_after=0.05))
+    # round 1 reaches server 1 — NEVER acked (the aggregator will die
+    # before durably committing), so it stays in the unacked buffers
+    for h in range(2):
+        rows = np.arange(prod_store.shards[h].n_procs)
+        prod_store.shards[h].apply_rows(
+            truth.perf.shards[h].extract_rows(rows))
+        producers[h].flush(heartbeat=False)
+    _converge(mon1, producers, links, srv1, ack=False)
+    assert all(1 in producers[h].unacked for h in range(2))
+    srv1.stop()
+
+    srv2 = SocketServer(addr).start()          # same port, fresh monitor
+    mon2 = Monitor(psg, ranges, srv2, comm=truth.comm, detect_every=None)
+    # round 2: the dead sockets surface as TransportErrors, the clients
+    # reconnect (jittered backoff), replay seq 1 and then deliver seq 2
+    for h in range(2):
+        prod_store.set_entry(ranges[h][0], 1, 7.25 + h)
+        producers[h].flush(heartbeat=False)
+    try:
+        _converge(mon2, producers, links, srv2,
+                  extra=lambda: [producers[h].flush(heartbeat=False)
+                                 for h in range(2)])
+        assert stores_equal(mon2.store, prod_store, V)
+        assert any(tr.stats.get("reconnects", 0) >= 1 for tr in transports)
+    finally:
+        for tr in transports:
+            tr.close()
+        srv2.stop()
+
+
+def test_producer_link_tick_resends_on_ack_stall():
+    psg, V, ranges, truth = _fleet()
+    clock = ManualClock()
+    with SocketServer() as srv:
+        mon = Monitor(psg, ranges, srv, comm=truth.comm, detect_every=None)
+        prod_store = ShardedStore(ranges, V)
+        tr = SocketTransport(srv.address, seed=0)
+        p = ShardProducer(0, prod_store.shards[0], tr)
+        link = ProducerLink(p, tr, resend_after=1.0, clock=clock)
+        prod_store.set_entry(0, 1, 3.0)
+        p.flush(heartbeat=False)
+        assert link.tick() == 0                # not stalled yet
+        clock.advance(1.5)                     # ack never came
+        assert link.tick() == 1                # unacked delta resent
+        deadline = time.monotonic() + DEADLINE
+        while mon.duplicates == 0:             # dup absorbed by seq window
+            assert time.monotonic() < deadline
+            mon.poll()
+            time.sleep(0.002)
+        tr.close()
+
+
+# ---------------------------------------------------------------------------
+# FaultyTransport composed OVER SocketTransport (satellite)
+# ---------------------------------------------------------------------------
+
+def test_faulty_transport_over_socket_transport_converges():
+    """Seeded in-process faults stacked on a real socket: drops and ack
+    losses trigger producer retries (each retry a fresh socket send),
+    delays release through recv — the store still converges exactly."""
+    psg, V, ranges, truth = _fleet(n_procs=12, n_hosts=3)
+    with SocketServer() as srv:
+        mon = Monitor(psg, ranges, srv, comm=truth.comm, detect_every=None)
+        prod_store = ShardedStore(ranges, V)
+        producers, links, fts = {}, [], []
+        for h in range(3):
+            tr = SocketTransport(srv.address, seed=h)
+            ft = FaultyTransport(tr, seed=100 + h, p_drop=0.3,
+                                 p_ack_loss=0.2, p_dup=0.2, p_delay=0.25,
+                                 max_delay=2)
+            fts.append(ft)
+            p = ShardProducer(h, prod_store.shards[h], ft, max_retries=20,
+                              base_backoff=0.0005, max_backoff=0.005)
+            producers[h] = p
+            links.append(ProducerLink(p, tr, resend_after=0.05))
+        rng = np.random.default_rng(0)
+        for _ in range(4):                     # several flush rounds
+            for h in range(3):
+                lo, hi = ranges[h]
+                for pr in range(lo, hi):
+                    if rng.random() < 0.7:
+                        prod_store.set_entry(
+                            pr, int(rng.integers(1, V)),
+                            float(rng.random() * 5),
+                            counters={"PAPI_TOT_CYC":
+                                      float(rng.integers(1, 99))})
+                producers[h].flush(heartbeat=False)
+
+        def release_held():
+            for ft in fts:
+                try:
+                    ft.flush_held()
+                    ft.recv()
+                except TransportError:
+                    pass
+
+        _converge(mon, producers, links, srv, extra=release_held)
+        assert stores_equal(mon.store, prod_store, V)
+        total = {}
+        for ft in fts:
+            for k, v in ft.stats.items():
+                total[k] = total.get(k, 0) + v
+        assert total.get("dropped", 0) > 0     # the schedule really fired
+        assert mon.duplicates > 0              # and the windows absorbed
+
+
+# ---------------------------------------------------------------------------
+# the proxy scenario end-to-end
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_socket_chaos_converges_bit_identical(seed):
+    r = socket_chaos_run(seed=seed)
+    assert r.abnormal_match and r.paths_match, r.transport_stats
+    assert r.store_match          # converged store == producers' shards
+    assert r.report_match         # rendered text == fault-free render
+    assert r.converged
+
+
+def test_socket_chaos_with_heavy_faults_and_stacked_faulty():
+    r = socket_chaos_run(seed=3, p_reset=0.25, p_tear=0.2, p_garbage=0.3,
+                         p_stall=0.1, rounds=4,
+                         faulty_wrap=dict(p_drop=0.2, p_ack_loss=0.15,
+                                          p_dup=0.15, p_delay=0.2,
+                                          max_delay=2))
+    assert r.converged, r.transport_stats
+    s = r.transport_stats
+    fired = sum(s.get(k, 0) for k in ("resets", "torn", "garbage", "stalls"))
+    assert fired > 0              # the proxy really misbehaved
+    assert r.duplicates_absorbed > 0
+
+
+def test_socket_chaos_uncompressed_also_converges():
+    r = socket_chaos_run(seed=1, compress=False)
+    assert r.converged

@@ -1,0 +1,296 @@
+"""Wire protocol: framing, resync, and the delta-compression codec.
+
+The codec contract under test (ISSUE 8): anything the frame layer
+delivers decodes to the exact row state the producer transmitted —
+diff rows reconstruct bit-identically against the lockstep caches, a
+broken diff chain is REJECTED (never guessed at), and corruption costs
+only the frames it overlapped.  Everything here is jax-free and
+socket-free; the live-socket side lives in test_net.py.
+"""
+import struct
+import zlib
+
+import numpy as np
+import pytest
+
+from repro.core.shard import ShardedStore, shard_ranges
+from repro.monitor import (Ack, DeltaDecoder, DeltaEncoder, FrameReader,
+                           Heartbeat, ShardDelta, WireError, decode_message,
+                           encode_frame, encode_message, stores_equal)
+from repro.monitor.wire import (HEADER, MAGIC, MSG_ACK, MSG_DELTA,
+                                MSG_HEARTBEAT, VERSION)
+
+V = 8  # vertices in the little stores below
+
+
+# ---------------------------------------------------------------------------
+# framing
+# ---------------------------------------------------------------------------
+
+def test_frame_roundtrip_across_arbitrary_chunking():
+    frames = [encode_frame(MSG_HEARTBEAT, bytes([i]) * (10 + i))
+              for i in range(5)]
+    stream = b"".join(frames)
+    reader = FrameReader()
+    got = []
+    # deliberately awkward chunk sizes: split mid-header and mid-payload
+    for i in range(0, len(stream), 7):
+        got += reader.feed(stream[i:i + 7])
+    assert [(t, p) for t, p in got] \
+        == [(MSG_HEARTBEAT, bytes([i]) * (10 + i)) for i in range(5)]
+    assert reader.stats["frames"] == 5
+    assert reader.stats.get("resyncs", 0) == 0
+    assert reader.pending_bytes() == 0
+
+
+def test_crc_corruption_drops_only_the_corrupted_frame():
+    good = encode_frame(MSG_HEARTBEAT, b"aaaa")
+    bad = bytearray(encode_frame(MSG_HEARTBEAT, b"bbbb"))
+    bad[HEADER.size + 1] ^= 0xFF               # flip a payload bit
+    reader = FrameReader()
+    got = reader.feed(bytes(bad) + good)
+    assert got == [(MSG_HEARTBEAT, b"aaaa")]
+    assert reader.stats["crc_errors"] == 1
+    assert reader.stats["resyncs"] >= 1
+
+
+def test_resync_after_garbage_between_frames():
+    a = encode_frame(MSG_HEARTBEAT, b"left")
+    b = encode_frame(MSG_HEARTBEAT, b"right")
+    garbage = b"\x00\xffnoise-that-is-not-a-frame\x13\x37"
+    reader = FrameReader()
+    got = reader.feed(a + garbage + b)
+    assert got == [(MSG_HEARTBEAT, b"left"), (MSG_HEARTBEAT, b"right")]
+    assert reader.stats["resyncs"] >= 1
+    assert reader.stats["skipped_bytes"] >= len(garbage)
+
+
+def test_garbage_containing_a_fake_magic_still_resyncs():
+    # garbage that embeds the magic but not a valid frame: the reader
+    # walks magic to magic until a real frame checks out
+    good = encode_frame(MSG_HEARTBEAT, b"ok")
+    fake = MAGIC + b"\x63\x01\xff\xff\xff\xff\x00\x00\x00\x00"
+    reader = FrameReader()
+    got = reader.feed(fake + good)
+    assert got == [(MSG_HEARTBEAT, b"ok")]
+
+
+def test_bad_version_and_oversize_are_skipped():
+    wrong_version = bytearray(encode_frame(MSG_HEARTBEAT, b"x"))
+    wrong_version[4] = VERSION + 9
+    huge = HEADER.pack(MAGIC, VERSION, MSG_HEARTBEAT, 1 << 30,
+                       zlib.crc32(b"") & 0xFFFFFFFF)
+    good = encode_frame(MSG_HEARTBEAT, b"fine")
+    reader = FrameReader(max_frame=1 << 20)
+    got = reader.feed(bytes(wrong_version) + huge + good)
+    assert got == [(MSG_HEARTBEAT, b"fine")]
+    assert reader.stats["bad_version"] == 1
+    assert reader.stats["oversize"] == 1
+
+
+def test_torn_frame_counts_as_truncated_on_close():
+    frame = encode_frame(MSG_HEARTBEAT, b"torn-in-half")
+    reader = FrameReader()
+    assert reader.feed(frame[:len(frame) // 2]) == []
+    reader.close()
+    assert reader.stats["truncated"] == 1
+    assert reader.pending_bytes() == 0
+
+
+# ---------------------------------------------------------------------------
+# message serialization
+# ---------------------------------------------------------------------------
+
+def test_heartbeat_and_ack_roundtrip():
+    reader = FrameReader()
+    hb = Heartbeat(host=3, seq=17, time=12.5)
+    ack = Ack(acks={0: 4, 7: 123456789012})
+    frames = reader.feed(encode_message(hb) + encode_message(ack))
+    assert len(frames) == 2
+    got_hb = decode_message(*frames[0])
+    got_ack = decode_message(*frames[1])
+    assert got_hb == hb
+    assert got_ack == ack
+
+
+def test_unknown_type_and_malformed_payloads_raise_wire_error():
+    with pytest.raises(WireError):
+        decode_message(99, b"")
+    with pytest.raises(WireError):
+        decode_message(MSG_HEARTBEAT, b"short")
+    with pytest.raises(WireError):
+        decode_message(MSG_ACK, struct.pack("<I", 3) + b"x")
+    with pytest.raises(TypeError):
+        encode_message(object())
+
+
+# ---------------------------------------------------------------------------
+# the delta codec
+# ---------------------------------------------------------------------------
+
+def _fill(store, rng, procs, *, vids=range(1, V), counters=("PAPI_TOT_CYC",
+                                                            "PAPI_L2_DCM")):
+    """Randomly mutate some entries of ``store`` (marks rows dirty)."""
+    for p in procs:
+        for vid in vids:
+            if rng.random() < 0.6:
+                store.set_entry(int(p), int(vid), float(rng.random() * 10),
+                                time_var=float(rng.random()),
+                                samples=int(rng.integers(1, 5)),
+                                counters={c: float(rng.integers(0, 50))
+                                          for c in counters
+                                          if rng.random() < 0.7})
+
+
+def _flush(shard, host, seq):
+    rows = shard.dirty_rows()
+    block = shard.extract_rows(rows)
+    shard.clear_dirty()
+    return ShardDelta(host=host, seq=seq, proc_start=shard.proc_start,
+                      block=block)
+
+
+def _apply(delta, store):
+    sh = store.shards[delta.host]
+    sh.ensure_columns(delta.block.n_cols)
+    sh.apply_rows(delta.block)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+@pytest.mark.parametrize("compress", [False, True])
+def test_delta_codec_replica_store_bit_identical(seed, compress):
+    """Property: over a lossless wire, any flush schedule leaves the
+    replica store bit-identical to the source — with and without
+    compression."""
+    rng = np.random.default_rng(seed)
+    ranges = shard_ranges(12, 3)
+    src = ShardedStore(ranges, V)
+    dst = ShardedStore(ranges, V)
+    enc = {h: DeltaEncoder(compress=compress) for h in range(3)}
+    dec = {h: DeltaDecoder() for h in range(3)}
+    seqs = {h: 0 for h in range(3)}
+    for _ in range(6):
+        for h in range(3):
+            lo, hi = ranges[h]
+            procs = [p for p in range(lo, hi) if rng.random() < 0.8]
+            _fill(src, rng, procs)
+            rows = src.shards[h].dirty_rows()
+            if not rows.size:
+                continue
+            seqs[h] += 1
+            delta = _flush(src.shards[h], h, seqs[h])
+            payload = enc[h].encode(delta)
+            out = dec[h].decode(payload)
+            assert out is not None
+            assert out.seq == delta.seq and out.host == delta.host
+            _apply(out, dst)
+    assert stores_equal(src, dst, V)
+
+
+def test_steady_state_diffs_beat_full_rows():
+    """After the first (full) flush, a small change re-encodes as a
+    diff row and costs a fraction of the full encoding."""
+    rng = np.random.default_rng(7)
+    ranges = shard_ranges(4, 1)
+    src = ShardedStore(ranges, V)
+    _fill(src, rng, range(4), vids=range(1, V))
+    enc = DeltaEncoder(compress=True)
+    d1 = _flush(src.shards[0], 0, 1)
+    full_bytes = len(enc.encode(d1))
+    assert enc.stats["full_rows"] == 4         # nothing cached yet
+
+    # touch ONE column of ONE row
+    src.set_entry(2, 3, 42.0, counters={"PAPI_TOT_CYC": 9.0})
+    d2 = _flush(src.shards[0], 0, 2)
+    diff_payload = enc.encode(d2)
+    assert enc.stats["diff_rows"] == 1
+    assert len(diff_payload) < full_bytes / 4
+
+
+def test_full_row_fallback_when_diff_is_denser():
+    """When every column of a row changes, the diff encoding loses and
+    the encoder falls back to the full row."""
+    rng = np.random.default_rng(11)
+    ranges = shard_ranges(2, 1)
+    src = ShardedStore(ranges, V)
+    _fill(src, rng, range(2))
+    enc = DeltaEncoder(compress=True)
+    enc.encode(_flush(src.shards[0], 0, 1))
+    # rewrite EVERYTHING (all columns + counters change)
+    for p in range(2):
+        for vid in range(1, V):
+            src.set_entry(p, vid, float(100 + p + vid),
+                          time_var=1.0, samples=9,
+                          counters={"PAPI_TOT_CYC": float(vid),
+                                    "PAPI_L2_DCM": float(p + 1)})
+    before = enc.stats.get("full_rows", 0)
+    enc.encode(_flush(src.shards[0], 0, 2))
+    assert enc.stats["full_rows"] > before     # diff lost, full row won
+
+
+def test_broken_diff_chain_is_rejected_not_misapplied():
+    """A diff whose base frame was lost (resync ate it) must make the
+    delta undecodable — the decoder never guesses."""
+    rng = np.random.default_rng(3)
+    ranges = shard_ranges(4, 1)
+    src = ShardedStore(ranges, V)
+    _fill(src, rng, range(4))
+    enc = DeltaEncoder(compress=True)
+    dec = DeltaDecoder()
+    p1 = enc.encode(_flush(src.shards[0], 0, 1))
+    assert dec.decode(p1) is not None
+
+    src.set_entry(1, 2, 5.0)
+    p2 = enc.encode(_flush(src.shards[0], 0, 2))   # diff against seq 1
+    src.set_entry(1, 2, 6.0)
+    p3 = enc.encode(_flush(src.shards[0], 0, 3))   # diff against seq 2
+
+    # p2 lost on the wire: p3's chain is broken at the decoder
+    assert dec.decode(p3) is None
+    assert dec.stats["undecodable"] == 1
+    # the producer resends 2 then 3: both now decode, in order
+    assert dec.decode(p2) is not None
+    got = dec.decode(p3)
+    assert got is not None
+    dst = ShardedStore(ranges, V)
+    # rebuild from a fresh full resend to check final state equality
+    enc2, dec2 = DeltaEncoder(compress=True), DeltaDecoder()
+    rows = np.arange(4)
+    blk = src.shards[0].extract_rows(rows)
+    d = ShardDelta(host=0, seq=4, proc_start=0, block=blk)
+    _apply(dec2.decode(enc2.encode(d)), dst)
+    assert stores_equal(src, dst, V)
+
+
+def test_decoder_survives_random_payload_bytes():
+    rng = np.random.default_rng(5)
+    dec = DeltaDecoder()
+    for n in (0, 3, 40, 200):
+        assert dec.decode(bytes(rng.integers(0, 256, n, dtype=np.uint8))) \
+            is None
+    assert dec.stats["malformed"] == 4
+
+
+def test_encoder_reset_reseeds_from_full_rows():
+    """After a reset (reconnect), the next delta is all full rows and a
+    FRESH decoder accepts it."""
+    rng = np.random.default_rng(9)
+    ranges = shard_ranges(3, 1)
+    src = ShardedStore(ranges, V)
+    _fill(src, rng, range(3))
+    enc = DeltaEncoder(compress=True)
+    enc.encode(_flush(src.shards[0], 0, 1))
+    src.set_entry(0, 1, 2.0)
+    enc.encode(_flush(src.shards[0], 0, 2))
+    assert enc.stats["diff_rows"] >= 1
+    enc.reset()                                 # reconnect
+    src.set_entry(0, 1, 3.0)
+    d = _flush(src.shards[0], 0, 3)
+    payload = enc.encode(d)
+    fresh = DeltaDecoder()                      # new connection, new cache
+    out = fresh.decode(payload)
+    assert out is not None
+    dst = ShardedStore(ranges, V)
+    _apply(out, dst)
+    got = dst.shards[0].time_at(0, 1)
+    assert got == 3.0

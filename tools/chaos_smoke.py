@@ -1,12 +1,16 @@
-"""Chaos smoke: one seeded fault-injection run of the always-on monitor.
+"""Chaos smoke: seeded fault-injection runs of the always-on monitor.
 
 ``make chaos-smoke`` (part of ``make check``) drives
 :func:`repro.monitor.chaos.chaos_run` through a lossy, duplicating,
 reordering transport — plus a dead host and an aggregator crash with
-snapshot restore — and asserts the convergence contract: the monitor's
-final detection/backtracking output matches the one-shot reference
-exactly, with fleet coverage stated.  The converged report is written to
-``chaos-report.txt`` (CI uploads it as an artifact).
+snapshot restore — and then :func:`repro.monitor.net.socket_chaos_run`
+through REAL loopback TCP sockets behind the byte-level chaos proxy
+(connection resets, torn frames, garbage bytes, stalls).  Each scenario
+asserts the convergence contract: the monitor's final detection/
+backtracking output, converged store, and rendered report match the
+one-shot reference exactly, with fleet coverage stated.  The converged
+report is written to ``chaos-report.txt`` (CI uploads it as an
+artifact).
 
 jax-free by construction (numpy backend); exits non-zero on any
 divergence, so a broken ingestion/recovery path fails ``make check``
@@ -26,7 +30,7 @@ def main(argv=None) -> int:
                     help="where to write the converged report text")
     args = ap.parse_args(argv)
 
-    from repro.monitor import chaos_run
+    from repro.monitor import chaos_run, socket_chaos_run
 
     scenarios = []
 
@@ -41,6 +45,14 @@ def main(argv=None) -> int:
                        snapshot_dir=snapdir, crash_after_round=2)
     scenarios.append(("crash-degraded", r2))
 
+    # real TCP through the byte-level chaos proxy: resets mid-stream,
+    # frames torn mid-write, garbage bytes forcing resync, stalls —
+    # the converged STORE and rendered REPORT must come out bit-
+    # identical to the fault-free one-shot run
+    r3 = socket_chaos_run(seed=args.seed + 2, p_reset=0.12, p_tear=0.1,
+                          p_garbage=0.15, p_stall=0.05)
+    scenarios.append(("socket-chaos", r3))
+
     lines = []
     ok = True
     for name, res in scenarios:
@@ -49,7 +61,8 @@ def main(argv=None) -> int:
         verdict = "converged" if res.converged else "DIVERGED"
         ok &= res.converged
         lines.append(f"[{name}] {verdict}  abnormal={res.abnormal_match} "
-                     f"paths={res.paths_match} "
+                     f"paths={res.paths_match} store={res.store_match} "
+                     f"report={res.report_match} "
                      f"dup_absorbed={res.duplicates_absorbed} "
                      f"applied={res.deltas_applied}  ({stats})")
     lines.append("")

@@ -9,9 +9,13 @@ floors.  The per-cell rows are written to ``scenario-accuracy.csv`` (CI
 uploads it as an artifact; the full bank x scale x backend table lives
 in ``benchmarks/bench_casestudy.py``).
 
-jax-free by construction (numpy backend over committed JSON traces), so
-the jax-absent CI job runs it unchanged; exits non-zero on any floor
-violation, failing ``make check`` loudly.
+jax-free by construction with the default ``--backend numpy`` (committed
+JSON traces only), so the jax-absent CI job runs it unchanged.  The CI
+jax job additionally runs ``make scenario-smoke-jax`` (``--backend
+jax``), scoring the SAME scenarios through the jitted detectors and
+uploading the table as its own artifact — a jax-vs-numpy accuracy
+divergence fails that job.  Exits non-zero on any floor violation,
+failing ``make check`` loudly.
 """
 from __future__ import annotations
 
@@ -27,6 +31,8 @@ def main(argv=None) -> int:
     ap.add_argument("--out", default="scenario-accuracy.csv",
                     help="where to write the accuracy table")
     ap.add_argument("--scales", type=int, nargs="*", default=list(SCALES))
+    ap.add_argument("--backend", default="numpy", choices=("numpy", "jax"),
+                    help="detection backend to score (jax requires jax)")
     args = ap.parse_args(argv)
 
     from repro.scenarios import SMOKE_SCENARIOS, get_scenario, run_and_score
@@ -38,12 +44,13 @@ def main(argv=None) -> int:
         sc = get_scenario(name)
         for n in args.scales:
             t0 = time.perf_counter()
-            res, score = run_and_score(sc, n, backend="numpy")
+            res, score = run_and_score(sc, n, backend=args.backend)
             dt = time.perf_counter() - t0
             passes = score.passes(sc.truth)
             ok &= passes
             rows.append(
-                f"{name},{n},numpy,{res.channel},{score.precision:.3f},"
+                f"{name},{n},{args.backend},{res.channel},"
+                f"{score.precision:.3f},"
                 f"{score.recall:.3f},{score.path_hit_rate:.3f},"
                 f"{score.n_reported},{score.n_truth},{dt:.3f},{passes}")
             verdict = "ok" if passes else "FLOOR VIOLATION"
