@@ -188,7 +188,18 @@ class SocketTransport(Transport):
     def send(self, msg) -> None:
         with self._lock:
             sock = self._ensure_connected()
-            data = encode_message(msg, self._encoder)
+            try:
+                data = encode_message(msg, self._encoder,
+                                      max_frame=self.max_frame)
+            except WireError as e:
+                # the receiver would discard the frame as oversize and
+                # it would be resent forever; the encoder cache is also
+                # ahead of a frame that never left — tear down so both
+                # codec caches reset, and fail loudly
+                self._teardown()
+                raise TransportError(
+                    f"frame for {self.address[0]}:{self.address[1]} "
+                    f"exceeds max_frame: {e}") from None
             try:
                 sock.sendall(data)
             except (OSError, ValueError) as e:
@@ -442,8 +453,8 @@ class SocketServer(Transport):
         """Aggregated wire statistics across live and closed
         connections (frames, resyncs, crc_errors, truncated,
         undecodable, connections, ...)."""
-        out = collections.Counter(self._closed_stats)
         with self._lock:
+            out = collections.Counter(self._closed_stats)
             for conn in self._conns.values():
                 out.update(conn.reader.stats)
                 out.update(conn.decoder.stats)

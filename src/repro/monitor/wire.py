@@ -38,8 +38,11 @@ are explicit, versioned, and checksummed):
   Correctness under loss: every diff row names the ``seq`` its base row
   was last encoded at; if the decoder's cache disagrees (frames were
   lost to a resync), the delta is REJECTED rather than mis-applied —
-  the producer's unacked buffer resends it, full rows re-seed the
-  cache, and the stream reconverges.  Encoder and decoder caches are
+  the producer's unacked buffer resends it, and because the encoder
+  emits a FULL row whenever a delta's seq has not advanced past the
+  last seq it encoded for that row (i.e. a resend), the replay re-seeds
+  the decoder's cache even on a live connection whose earlier frames
+  were eaten by a resync.  Encoder and decoder caches are
   per-connection and reset on reconnect, so a fresh connection always
   starts from full rows.
 """
@@ -90,9 +93,20 @@ class WireError(ValueError):
 # framing
 # ---------------------------------------------------------------------------
 
-def encode_frame(msg_type: int, payload: bytes) -> bytes:
+def encode_frame(msg_type: int, payload: bytes, *,
+                 max_frame: int = DEFAULT_MAX_FRAME) -> bytes:
     """One wire frame: header (magic, version, type, length, CRC32) +
-    payload."""
+    payload.
+
+    Raises :class:`WireError` when the payload exceeds ``max_frame`` —
+    the receiver's :class:`FrameReader` would discard such a frame as
+    oversize on every delivery, so silently sending it guarantees an
+    endless resend loop; failing loudly on the send side surfaces the
+    misconfiguration instead."""
+    if len(payload) > max_frame:
+        raise WireError(
+            f"{len(payload)}-byte payload exceeds max_frame={max_frame}; "
+            f"the receiver would discard it as oversize")
     return HEADER.pack(MAGIC, VERSION, msg_type, len(payload),
                        zlib.crc32(payload) & 0xFFFFFFFF) + payload
 
@@ -114,13 +128,20 @@ class FrameReader:
         self.stats: Dict[str, int] = collections.Counter()
 
     def _resync(self) -> None:
-        """Drop bytes up to the next possible frame start (the next magic
-        at offset >= 1; everything before it is lost)."""
+        """Drop bytes up to the next possible frame start: the next full
+        magic at offset >= 1, else a trailing proper prefix of the magic
+        (the rest of it may still be in flight — dropping it would tear
+        the healthy frame straddling the chunk boundary)."""
         idx = self._buf.find(MAGIC, 1)
-        dropped = len(self._buf) if idx < 0 else idx
-        del self._buf[:dropped]
+        if idx < 0:
+            idx = len(self._buf)
+            for k in range(len(MAGIC) - 1, 0, -1):
+                if idx - k >= 1 and self._buf[idx - k:idx] == MAGIC[:k]:
+                    idx -= k
+                    break
+        del self._buf[:idx]
         self.stats["resyncs"] += 1
-        self.stats["skipped_bytes"] += dropped
+        self.stats["skipped_bytes"] += idx
 
     def feed(self, data: bytes) -> List[Tuple[int, bytes]]:
         self._buf.extend(data)
@@ -331,6 +352,11 @@ class DeltaEncoder:
     connection down (the socket transport does) — the caches tolerate
     lost frames via the per-row base-seq check, not mid-frame rewinds.
 
+    A RESEND — a delta whose seq is not past the last seq this
+    connection encoded for a row — always carries that row in full
+    (``stats["resend_full_rows"]``): the cached state may belong to a
+    frame the peer lost, so diffing against it could never decode.
+
     ``compress=False`` always emits full rows (the wire-bytes baseline
     the benchmark reports against).
     """
@@ -358,11 +384,18 @@ class DeltaEncoder:
             full = _encode_full_row(cur)
             enc, mode = full, ROW_FULL
             prev = self._rows.get((delta.host, row))
+            # a RESEND (seq not past the last seq encoded for this row)
+            # must go out full: the frame that advanced the cache may be
+            # the very one the peer lost, so a diff against it would be
+            # rejected on every retry — the stream would never reconverge
             if self.compress and prev is not None \
-                    and prev.n_cols == cur.n_cols:
+                    and prev.n_cols == cur.n_cols \
+                    and delta.seq > prev.seq:
                 diff = _encode_diff_row(prev, cur)
                 if len(diff) < len(full):      # fall back when denser
                     enc, mode = diff, ROW_DIFF
+            elif prev is not None and delta.seq <= prev.seq:
+                self.stats["resend_full_rows"] += 1
             out += _ROW_HEAD.pack(row, mode)
             out += enc
             self._rows[(delta.host, row)] = cur
@@ -504,21 +537,25 @@ class DeltaDecoder:
 # whole-message encode/decode
 # ---------------------------------------------------------------------------
 
-def encode_message(msg, encoder: Optional[DeltaEncoder] = None) -> bytes:
+def encode_message(msg, encoder: Optional[DeltaEncoder] = None, *,
+                   max_frame: int = DEFAULT_MAX_FRAME) -> bytes:
     """``msg`` (ShardDelta / Heartbeat / Ack) as one complete frame.
-    Deltas need the connection's :class:`DeltaEncoder`."""
+    Deltas need the connection's :class:`DeltaEncoder`.  Raises
+    :class:`WireError` when the payload exceeds ``max_frame`` (see
+    :func:`encode_frame`)."""
     if isinstance(msg, ShardDelta):
         if encoder is None:
             encoder = DeltaEncoder(compress=False)
-        return encode_frame(MSG_DELTA, encoder.encode(msg))
+        return encode_frame(MSG_DELTA, encoder.encode(msg),
+                            max_frame=max_frame)
     if isinstance(msg, Heartbeat):
         return encode_frame(MSG_HEARTBEAT, _HEARTBEAT.pack(
-            msg.host, msg.seq, msg.time))
+            msg.host, msg.seq, msg.time), max_frame=max_frame)
     if isinstance(msg, Ack):
         out = bytearray(_U32.pack(len(msg.acks)))
         for host, seq in sorted(msg.acks.items()):
             out += struct.pack("<iq", host, seq)
-        return encode_frame(MSG_ACK, bytes(out))
+        return encode_frame(MSG_ACK, bytes(out), max_frame=max_frame)
     raise TypeError(f"cannot put {type(msg).__name__} on the wire")
 
 

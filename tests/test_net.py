@@ -186,6 +186,16 @@ def test_clean_loopback_store_bit_identical_and_acked():
             tr.close()
 
 
+def test_send_side_max_frame_surfaces_as_transport_error():
+    """A frame the receiver would discard as oversize must fail loudly
+    at send time, not be silently dropped and resent forever."""
+    with SocketServer() as srv:
+        tr = SocketTransport(srv.address, max_frame=8, seed=0)
+        with pytest.raises(TransportError, match="max_frame"):
+            tr.send(Heartbeat(host=0, seq=1, time=0.0))   # 20-byte payload
+        tr.close()
+
+
 def test_server_send_is_not_a_thing():
     with SocketServer() as srv:
         with pytest.raises(RuntimeError, match="receive side"):
@@ -363,6 +373,19 @@ def test_socket_chaos_with_heavy_faults_and_stacked_faulty():
     fired = sum(s.get(k, 0) for k in ("resets", "torn", "garbage", "stalls"))
     assert fired > 0              # the proxy really misbehaved
     assert r.duplicates_absorbed > 0
+
+
+def test_socket_chaos_garbage_only_recovers_on_the_live_connection():
+    """Garbage-only faults (no resets, no tears): frames eaten by
+    resyncs must come back via stalled-ack tick resends re-encoded on
+    the SAME live connection — the livelock regression where re-encoded
+    resends diffed against a base seq the decoder never received and
+    were rejected on every retry (only a reset could rescue them)."""
+    r = socket_chaos_run(seed=5, p_reset=0.0, p_tear=0.0, p_garbage=0.3,
+                         p_stall=0.0, rounds=4)
+    assert r.converged, r.transport_stats
+    assert r.store_match and r.report_match
+    assert r.transport_stats.get("garbage", 0) > 0
 
 
 def test_socket_chaos_uncompressed_also_converges():

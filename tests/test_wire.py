@@ -88,6 +88,31 @@ def test_bad_version_and_oversize_are_skipped():
     assert reader.stats["oversize"] == 1
 
 
+def test_resync_keeps_partial_magic_straddling_a_chunk_boundary():
+    """Garbage followed by the first bytes of a healthy frame's magic:
+    the resync must retain the partial magic, or the frame whose header
+    straddles the chunk boundary is destroyed along with the garbage."""
+    frame = encode_frame(MSG_HEARTBEAT, b"straddle")
+    for cut in range(1, len(MAGIC)):
+        reader = FrameReader()
+        assert reader.feed(b"\x00\x01\x02garbage" + frame[:cut]) == []
+        got = reader.feed(frame[cut:])
+        assert got == [(MSG_HEARTBEAT, b"straddle")], f"cut={cut}"
+        assert reader.stats["resyncs"] >= 1
+        assert reader.pending_bytes() == 0
+
+
+def test_encode_frame_enforces_max_frame_on_the_send_side():
+    """An over-limit payload must fail loudly at encode time — the
+    receiver would discard it as oversize forever."""
+    with pytest.raises(WireError, match="max_frame"):
+        encode_frame(MSG_HEARTBEAT, b"x" * 64, max_frame=32)
+    with pytest.raises(WireError, match="max_frame"):
+        encode_message(Heartbeat(host=0, seq=1, time=0.0), max_frame=4)
+    # at the limit is fine
+    assert encode_frame(MSG_HEARTBEAT, b"x" * 32, max_frame=32)
+
+
 def test_torn_frame_counts_as_truncated_on_close():
     frame = encode_frame(MSG_HEARTBEAT, b"torn-in-half")
     reader = FrameReader()
@@ -241,16 +266,25 @@ def test_broken_diff_chain_is_rejected_not_misapplied():
     assert dec.decode(p1) is not None
 
     src.set_entry(1, 2, 5.0)
-    p2 = enc.encode(_flush(src.shards[0], 0, 2))   # diff against seq 1
+    d2 = _flush(src.shards[0], 0, 2)
+    enc.encode(d2)                                 # diff against seq 1
     src.set_entry(1, 2, 6.0)
-    p3 = enc.encode(_flush(src.shards[0], 0, 3))   # diff against seq 2
+    d3 = _flush(src.shards[0], 0, 3)
+    p3 = enc.encode(d3)                            # diff against seq 2
 
-    # p2 lost on the wire: p3's chain is broken at the decoder
+    # seq 2 lost on the wire: p3's chain is broken at the decoder
     assert dec.decode(p3) is None
     assert dec.stats["undecodable"] == 1
-    # the producer resends 2 then 3: both now decode, in order
-    assert dec.decode(p2) is not None
-    got = dec.decode(p3)
+    # the producer resends 2 then 3 THROUGH THE SAME LIVE ENCODER (the
+    # ProducerLink.tick path — no reconnect, no byte replay): the
+    # encoder sees seq 2 has not advanced past the cache, emits a full
+    # row, and the decoder accepts both in order (3 may legally diff
+    # against the state the resent 2 just re-seeded)
+    r2 = enc.encode(d2)
+    r3 = enc.encode(d3)
+    assert enc.stats["resend_full_rows"] >= 1
+    assert dec.decode(r2) is not None
+    got = dec.decode(r3)
     assert got is not None
     dst = ShardedStore(ranges, V)
     # rebuild from a fresh full resend to check final state equality
@@ -259,6 +293,56 @@ def test_broken_diff_chain_is_rejected_not_misapplied():
     blk = src.shards[0].extract_rows(rows)
     d = ShardDelta(host=0, seq=4, proc_start=0, block=blk)
     _apply(dec2.decode(enc2.encode(d)), dst)
+    assert stores_equal(src, dst, V)
+
+
+def test_reencoded_resend_reconverges_on_a_live_connection():
+    """The livelock regression: after frame loss on a LIVE connection,
+    resends travel through the connection's encoder (NOT as replayed
+    bytes).  Re-encoded resends must come back as full rows — a diff
+    against the encoder's latest cache names a base seq the decoder
+    never received and would be rejected on every retry, stalling the
+    stream until a connection reset."""
+    rng = np.random.default_rng(17)
+    ranges = shard_ranges(3, 1)
+    src = ShardedStore(ranges, V)
+    dst = ShardedStore(ranges, V)
+    _fill(src, rng, range(3))
+    enc = DeltaEncoder(compress=True)
+    dec = DeltaDecoder()
+    _apply(dec.decode(enc.encode(_flush(src.shards[0], 0, 1))), dst)
+
+    # seq 2 is lost on the wire (resync ate its frame); seqs 3 and 4
+    # arrive but their diff chains are broken at the decoder
+    src.set_entry(0, 2, 5.0)
+    d2 = _flush(src.shards[0], 0, 2)
+    enc.encode(d2)                                 # never delivered
+    src.set_entry(0, 2, 6.0)
+    d3 = _flush(src.shards[0], 0, 3)
+    assert dec.decode(enc.encode(d3)) is None
+    src.set_entry(0, 3, 6.5)                       # row 0: chain broken
+    src.set_entry(1, 4, 7.0)                       # row 1: chain intact
+    d4 = _flush(src.shards[0], 0, 4)
+    # ONE broken row rejects the whole delta, healthy row 1 included
+    assert dec.decode(enc.encode(d4)) is None
+    assert dec.stats["undecodable"] == 2
+
+    # the stalled-ack resend replays the whole unacked buffer through
+    # the same encoder; every delta must now decode and converge
+    for d in (d2, d3, d4):
+        out = dec.decode(enc.encode(d))
+        assert out is not None, f"resend of seq {d.seq} undecodable"
+        _apply(out, dst)
+    assert stores_equal(src, dst, V)
+
+    # and the connection is healthy again: new deltas diff as usual
+    src.set_entry(2, 3, 8.0)
+    d5 = _flush(src.shards[0], 0, 5)
+    before = enc.stats.get("diff_rows", 0)
+    out = dec.decode(enc.encode(d5))
+    assert out is not None
+    _apply(out, dst)
+    assert enc.stats["diff_rows"] > before
     assert stores_equal(src, dst, V)
 
 
