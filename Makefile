@@ -2,7 +2,7 @@ PYTHONPATH := src:.
 export PYTHONPATH
 
 .PHONY: check test smoke bench bench-smoke docs-check chaos-smoke \
-	scenario-smoke scenario-smoke-jax
+	scenario-smoke scenario-smoke-jax detect-fused-smoke
 
 test:
 	python -m pytest -x -q
@@ -40,10 +40,18 @@ scenario-smoke-jax:
 	python tools/scenario_smoke.py --backend jax \
 		--out scenario-accuracy-jax.csv
 
+# the fused detection kernels in Pallas interpret mode (the same kernel
+# code that compiles on TPU) checked against the pure-numpy oracle;
+# exits 0 with a note when jax is absent (the no-jax CI job runs this
+# too)
+detect-fused-smoke:
+	python tools/detect_fused_smoke.py
+
 # tier-1 tests + the graph-core smoke benchmark (perf regressions fail
 # loudly) + executable documentation + the monitor chaos smoke + the
-# scenario-bank accuracy smoke
-check: test bench-smoke docs-check chaos-smoke scenario-smoke
+# scenario-bank accuracy smoke + the fused-kernel interpret smoke
+check: test bench-smoke docs-check chaos-smoke scenario-smoke \
+	detect-fused-smoke
 
 bench:
 	python -m benchmarks.run

@@ -53,11 +53,17 @@ JIT_STRATEGIES = ("mean", "max", "p0", "var")
 VAR_EPS = 1e-18
 
 
-def _resolve_backend(backend: Optional[str]):
+def _resolve_backend(backend: Optional[str], device_live: bool = False):
     """Return the detect_jax module for the jitted path, or None for numpy.
 
-    "auto" (the default) only opts into jax when something else in the
-    process already imported it; "jax" imports (and raises if unavailable);
+    "auto" (the default) only opts into jax when it would plausibly win:
+    jax must already be imported by something else in the process AND
+    either the caller's data is device-resident (``device_live``, i.e. a
+    sharded store feeding the zero-copy DeviceShardView path) or a
+    non-CPU accelerator is the default jax backend.  On CPU-only jax with
+    host-side stores the dispatch overhead makes the jitted path ~10x
+    slower than numpy, so auto stays on numpy there; "jax" (explicitly or
+    via SCALANA_DETECT_BACKEND) still forces the jitted path, and
     "numpy" never touches jax.
     """
     from_env = backend is None
@@ -71,8 +77,16 @@ def _resolve_backend(backend: Optional[str]):
             f"are 'numpy', 'jax', 'auto'")
     if backend == "numpy":
         return None
-    if backend == "auto" and "jax" not in sys.modules:
-        return None
+    if backend == "auto":
+        if "jax" not in sys.modules:
+            return None
+        if not device_live:
+            try:
+                import jax
+                if jax.default_backend() == "cpu":
+                    return None
+            except Exception:
+                return None
     try:
         from repro.core import detect_jax
     except ImportError:        # only jax-absence falls back; bugs surface
@@ -284,9 +298,10 @@ def detect_non_scalable(series: Mapping[int, PPG], *,
 
     S = len(scales)
     present = np.zeros((S, V), bool)         # vertex exists at that scale
-    jx = _resolve_backend(backend) if strategy in JIT_STRATEGIES else None
-    if jx is not None and isinstance(ref.perf, ShardedStore) \
-            and live_idx is None:
+    device_ok = isinstance(ref.perf, ShardedStore) and live_idx is None
+    jx = (_resolve_backend(backend, device_live=device_ok)
+          if strategy in JIT_STRATEGIES else None)
+    if jx is not None and device_ok:
         # device-fed: each scale's per-host blocks feed the kernels from
         # its cached DeviceShardView (dirty rows re-upload, nothing
         # else); neither the stacked (S, Pmax, V) tensor nor the sharded
@@ -397,8 +412,9 @@ def detect_abnormal(ppg: PPG, *, abnorm_thd: float = 1.3,
     # those materialize Python objects (a straggler can flag thousands of
     # (proc, vertex) pairs; building objects for all of them dominated
     # detection cost at 8k procs)
-    jx = _resolve_backend(backend)
-    if jx is not None and isinstance(ppg.perf, ShardedStore):
+    device_ok = isinstance(ppg.perf, ShardedStore)
+    jx = _resolve_backend(backend, device_live=device_ok)
+    if jx is not None and device_ok:
         # device-fed: the per-host blocks live on the device (dirty rows
         # re-upload per call), concatenate there, and the step time,
         # median, flagging and ranking all run device-side — the stacked

@@ -26,6 +26,16 @@ step time from the merged stack itself, and
 ``non_scalable_views`` / ``abnormal_topk_view`` are their entry points;
 the stacked (P, V) matrix exists on neither host nor wire.
 
+Since the fused-detection PR, every entry point dispatches to the
+one-launch fused ops in ``repro.kernels.detect_fused`` by default
+(Pallas on TPU; a fused-jnp fast path elsewhere — integer-key sort
+median + tournament top-k, which is what fixed the ~10-dispatch CPU
+overhead), with device-cached historical merge columns making
+steady-state ``non_scalable_views`` O(live scale).  The kernels above
+are retained verbatim as the unfused baseline: the parity suite pins
+``fused == legacy == numpy``, the view entry points accept
+``fused=False``, and the bench still times the legacy chain.
+
 All kernels run in float64 (``jax.experimental.enable_x64`` — thread-local,
 so the rest of the process keeps jax's float32 default) and match the
 numpy reference in ``repro.core.detect`` to reduction-order rounding
@@ -60,56 +70,21 @@ except ImportError:                                # pragma: no cover
 
 
 if HAS_JAX:
-
-    def _merge_all(t: "jax.Array", var: "jax.Array") -> "jax.Array":
-        """(S, P, V) times + variances -> (4, S, V) merged, rows ordered as
-        JIT_STRATEGIES.  Non-positive readings are dead (excluded)."""
-        pos = t > 0.0
-        cnt = pos.sum(axis=1)                              # (S, V)
-        any_pos = cnt > 0
-        total = jnp.where(pos, t, 0.0).sum(axis=1)
-        mean = jnp.where(any_pos, total / jnp.maximum(cnt, 1), 0.0)
-        mx = jnp.where(any_pos, t.max(axis=1), 0.0)
-        p0 = t[:, 0, :]
-        p0 = jnp.where(p0 > 0.0, p0, mean)
-        w = jnp.where(pos, 1.0 / (var + VAR_EPS), 0.0)
-        wsum = w.sum(axis=1)
-        varm = jnp.where(wsum > 0,
-                         (w * t).sum(axis=1) / jnp.where(wsum > 0, wsum, 1.0),
-                         0.0)
-        return jnp.stack([mean, mx, p0, varm])             # (4, S, V)
+    # The pure merge/slope/flag formulas moved to
+    # ``repro.kernels.detect_fused.kernel`` — single source of truth
+    # shared by these legacy kernels (kept for parity tests and as the
+    # unfused baseline) and the fused one-launch paths the entry points
+    # now dispatch to.
+    from repro.kernels.detect_fused import ops as _fused
+    from repro.kernels.detect_fused.kernel import (
+        abnormal_flags as _abnormal_flags,
+        merge_all_stack as _merge_all,
+        merge_blocks as _merge_blocks,
+        slope_share_flag as _slope_share_flag)
 
     @jax.jit
     def _merge_all_kernel(t, var):
         return _merge_all(t, var)
-
-    def _slope_share_flag(M, logp, present, total_max,
-                          ideal_slope, slope_margin, min_share):
-        """(4, S, V) merged stack -> (slope, share, flagged), each (4, V).
-
-        The back half of the detect math, shared by the stacked host-fed
-        kernel and the device-block path.  ``share`` is guarded: an
-        all-dead final scale (``total_max <= 0``) yields share 0 — and so
-        flags nothing — instead of inf/nan garbage."""
-        valid = (M > 0.0) & present[None]
-        x = logp[None, :, None]                            # (1, S, 1)
-        Y = jnp.where(valid, jnp.log(jnp.where(valid, M, 1.0)), 0.0)
-        n = valid.sum(axis=1)                              # (4, V)
-        Sx = (x * valid).sum(axis=1)
-        Sy = Y.sum(axis=1)
-        Sxx = (x * x * valid).sum(axis=1)
-        Sxy = (x * Y).sum(axis=1)
-        denom = n * Sxx - Sx ** 2
-        num = n * Sxy - Sx * Sy
-        slope = jnp.where((denom != 0) & (n >= 2),
-                          num / jnp.where(denom != 0, denom, 1.0), 0.0)
-        share = jnp.where(total_max > 0.0,
-                          M[:, -1, :] / jnp.where(total_max > 0.0,
-                                                  total_max, 1.0), 0.0)
-        flagged = ((M.sum(axis=1) > 0.0)
-                   & (slope - ideal_slope > slope_margin)
-                   & (share >= min_share))
-        return slope, share, flagged
 
     @jax.jit
     def _non_scalable_kernel(t, var, logp, present, total_max,
@@ -127,33 +102,10 @@ if HAS_JAX:
         return M, slope, share, flagged
 
     # -- device-block kernels (DeviceShardView inputs) ------------------
-    @jax.jit
-    def _merge_blocks_kernel(ts, vs):
-        """One scale's per-host blocks -> its (4, V) merged column.
-
-        ``ts`` / ``vs`` are tuples of (n_local, V) device blocks (row
-        order = global proc order).  Every merge is an associative
-        block-level reduction: counts/sums/weighted sums add across
-        blocks, maxima combine by max, and "p0" reads row 0 of block 0 —
-        so the stacked host matrix never exists, on either side of the
-        transfer."""
-        pos = [t > 0.0 for t in ts]
-        cnt = sum(p.sum(axis=0) for p in pos)              # (V,)
-        total = sum(jnp.where(p, t, 0.0).sum(axis=0)
-                    for p, t in zip(pos, ts))
-        mx_raw = jnp.stack([t.max(axis=0) for t in ts]).max(axis=0)
-        w = [jnp.where(p, 1.0 / (v + VAR_EPS), 0.0)
-             for p, v in zip(pos, vs)]
-        wsum = sum(wi.sum(axis=0) for wi in w)
-        wt = sum((wi * t).sum(axis=0) for wi, t in zip(w, ts))
-        any_pos = cnt > 0
-        mean = jnp.where(any_pos, total / jnp.maximum(cnt, 1), 0.0)
-        mx = jnp.where(any_pos, mx_raw, 0.0)
-        p0 = ts[0][0, :]
-        p0 = jnp.where(p0 > 0.0, p0, mean)
-        varm = jnp.where(wsum > 0,
-                         wt / jnp.where(wsum > 0, wsum, 1.0), 0.0)
-        return jnp.stack([mean, mx, p0, varm])             # (4, V)
+    # One scale's per-host blocks -> its (4, V) merged column, as
+    # associative block-level reductions (row order = global proc order;
+    # the stacked host matrix never exists on either side).
+    _merge_blocks_kernel = jax.jit(_merge_blocks)
 
     @jax.jit
     def _slope_flag_from_M_kernel(M, logp, present, top_idx,
@@ -168,19 +120,6 @@ if HAS_JAX:
         total_max = M[JIT_STRATEGIES.index("max"), -1, top_idx].sum()
         return _slope_share_flag(M, logp, present, total_max,
                                  ideal_slope, slope_margin, min_share)
-
-    def _abnormal_flags(t, typical, abnorm_thd, min_share, step_time):
-        """(P, V) times + (V,) typical -> (P, V) flag mask.
-
-        ``typical`` (the cross-process median) is computed on the host:
-        it is an order statistic, and XLA's column sort is the one piece
-        of the detection math that is slower under jit on CPU than the
-        numpy introselect."""
-        active = t.max(axis=0) > 0.0
-        over = ((typical > 0.0) & (t > abnorm_thd * typical)
-                & ((t - typical) / step_time >= min_share))
-        dead_typical = (typical == 0.0) & (t / step_time >= min_share)
-        return (over | dead_typical) & active
 
     @jax.jit
     def _abnormal_kernel(t, typical, abnorm_thd, min_share, step_time):
@@ -293,18 +232,19 @@ def non_scalable_arrays(scales: Sequence[int], t: np.ndarray, var: np.ndarray,
                         min_share: float, strategy: str
                         ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
                                    np.ndarray]:
-    """Run the fused non-scalable kernel; returns the ``strategy`` row of
-    (M (S, V), slope (V,), share (V,), flagged (V,))."""
+    """Run the one-launch fused non-scalable op; returns the ``strategy``
+    row of (M (S, V), slope (V,), share (V,), flagged (V,))."""
     si = JIT_STRATEGIES.index(strategy)
     dtype, ctx = _precision()
     logp = np.log(np.asarray(scales, dtype))
     with ctx:
-        M, slope, share, flagged = _non_scalable_kernel(
+        M, slope, share, flagged = _fused.fused_non_scalable(
             jnp.asarray(np.asarray(t, dtype)),
             jnp.asarray(np.asarray(var, dtype)),
             jnp.asarray(logp), jnp.asarray(present),
-            float(total_max), float(ideal_slope), float(slope_margin),
-            float(min_share))
+            ideal_slope=float(ideal_slope),
+            slope_margin=float(slope_margin),
+            min_share=float(min_share), total_max=float(total_max))
     return (np.asarray(M)[si], np.asarray(slope)[si],
             np.asarray(share)[si], np.asarray(flagged)[si])
 
@@ -341,9 +281,9 @@ def abnormal_topk(t: np.ndarray, abnorm_thd: float, min_share: float,
     dtype, ctx = _precision()
     t_host = np.asarray(t, dtype)
     with ctx:
-        order, _, count, typical = _abnormal_topk_kernel(
-            jnp.asarray(t_host),
-            float(abnorm_thd), float(min_share), float(step_time), int(k))
+        order, _, count, typical = _fused.fused_abnormal(
+            (jnp.asarray(t_host),), None, float(abnorm_thd),
+            float(min_share), int(k), step_time=float(step_time))
         n_flagged = int(count)                 # report time: flags leave
         order = np.asarray(order[:min(int(k), n_flagged)])  # the device
         typical = np.asarray(typical)
@@ -353,7 +293,8 @@ def abnormal_topk(t: np.ndarray, abnorm_thd: float, min_share: float,
 
 def abnormal_topk_view(view, n_vertices: int, top: Sequence[int],
                        abnorm_thd: float, min_share: float, k: int,
-                       live_rows: Optional[np.ndarray] = None
+                       live_rows: Optional[np.ndarray] = None,
+                       fused: bool = True
                        ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, int]:
     """Abnormal detection fed straight from a
     :class:`~repro.core.shard.DeviceShardView` — the online entry point.
@@ -371,22 +312,39 @@ def abnormal_topk_view(view, n_vertices: int, top: Sequence[int],
     hit one compiled executable instead of retracing per live-set size.
     The returned ``procs`` index INTO ``live_rows`` (the caller maps
     back to global procs), matching the host path's row-subset
-    semantics."""
+    semantics.
+
+    ``fused=True`` (the default) routes through the one-launch fused op
+    (``repro.kernels.detect_fused``); ``fused=False`` keeps the legacy
+    multi-dispatch kernel chain — the unfused baseline the bench still
+    times and the parity tests pin the fused path against."""
     dtype, ctx = _precision()
     n_procs = view.n_procs
     with ctx:
         view.refresh(n_vertices, dtype)
         ts = tuple(view.time_blocks())
         top_d = jnp.asarray(np.asarray(top, np.int32))
-        if live_rows is None:
-            order, _, count, typical = _abnormal_topk_blocks_kernel(
-                ts, top_d, float(abnorm_thd), float(min_share), int(k))
-        else:
+        if live_rows is not None:
             live = np.zeros(n_procs, np.int32)
             valid = np.zeros(n_procs, bool)
             n_live = int(len(live_rows))
             live[:n_live] = np.asarray(live_rows, np.int32)
             valid[:n_live] = True
+        if fused:
+            view.kernel_launches += 1
+            if live_rows is None:
+                order, _, count, typical = _fused.fused_abnormal(
+                    ts, top_d, float(abnorm_thd), float(min_share),
+                    int(k))
+            else:
+                order, _, count, typical = _fused.fused_abnormal(
+                    ts, top_d, float(abnorm_thd), float(min_share),
+                    int(k), live=jnp.asarray(live),
+                    valid=jnp.asarray(valid))
+        elif live_rows is None:
+            order, _, count, typical = _abnormal_topk_blocks_kernel(
+                ts, top_d, float(abnorm_thd), float(min_share), int(k))
+        else:
             order, _, count, typical = _abnormal_topk_blocks_live_kernel(
                 ts, jnp.asarray(live), jnp.asarray(valid), top_d,
                 float(abnorm_thd), float(min_share), int(k))
@@ -399,25 +357,56 @@ def abnormal_topk_view(view, n_vertices: int, top: Sequence[int],
 def non_scalable_views(scales: Sequence[int], views: Sequence,
                        n_vertices: int, present: np.ndarray,
                        top: Sequence[int], ideal_slope: float,
-                       slope_margin: float, min_share: float, strategy: str
+                       slope_margin: float, min_share: float, strategy: str,
+                       fused: bool = True
                        ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
                                   np.ndarray]:
     """Non-scalable detection fed from per-scale
     :class:`~repro.core.shard.DeviceShardView`\\ s.
 
-    Each scale's per-host blocks are merged blockwise on the device
-    (:func:`_merge_blocks_kernel` — block-level reductions, no stacked
-    (S, P, V) matrix on either side) and the merged (4, S, V) stack
-    feeds the slope/share/flag kernel, which derives the reference
-    scale's total step time from its own "max" row.  Returns the
-    ``strategy`` row of (M (S, V), slope (V,), share (V,), flagged (V,))
-    as host arrays — O(S·V), never O(P·V)."""
+    The fused path (default) exploits that historical scales are
+    IMMUTABLE once their run completes: each completed view's (4, V)
+    merged column is computed once (``merge_scale_column``) and cached
+    on the view keyed by its upload revision
+    (:meth:`~repro.core.shard.DeviceShardView.merged_column`), so a
+    steady-state call merges only the LIVE scale's blocks and runs the
+    slope/share/flag tail — one ``fused_non_scalable_live`` launch over
+    the cached (4, S-1, V) stack.  Any write, re-pin, layout or dtype
+    change bumps the revision and refills that scale's column.  The
+    reference step time still derives from the merged "max" row at the
+    final scale.  ``fused=False`` keeps the legacy per-scale merge +
+    slope-kernel chain (the unfused baseline).  Returns the ``strategy``
+    row of (M (S, V), slope (V,), share (V,), flagged (V,)) as host
+    arrays — O(S·V), never O(P·V)."""
     si = JIT_STRATEGIES.index(strategy)
     dtype, ctx = _precision()
     logp = np.log(np.asarray(scales, dtype))
     with ctx:
         for view in views:
             view.refresh(n_vertices, dtype)
+        if fused:
+            cols = []
+            for v in views[:-1]:
+                col = v.merged_column()
+                if col is None:
+                    col = _fused.merge_scale_column(
+                        tuple(v.time_blocks()), tuple(v.var_blocks()))
+                    v.cache_merged_column(col)
+                    v.kernel_launches += 1
+                cols.append(col)
+            hist = (jnp.stack(cols, axis=1) if cols
+                    else jnp.zeros((4, 0, int(n_vertices)), dtype))
+            live = views[-1]
+            live.kernel_launches += 1
+            M, slope, share, flagged = _fused.fused_non_scalable_live(
+                tuple(live.time_blocks()), tuple(live.var_blocks()),
+                hist, jnp.asarray(logp), jnp.asarray(present),
+                jnp.asarray(np.asarray(top, np.int32)),
+                ideal_slope=float(ideal_slope),
+                slope_margin=float(slope_margin),
+                min_share=float(min_share))
+            return (np.asarray(M)[si], np.asarray(slope)[si],
+                    np.asarray(share)[si], np.asarray(flagged)[si])
         M = jnp.stack(
             [_merge_blocks_kernel(tuple(v.time_blocks()),
                                   tuple(v.var_blocks())) for v in views],

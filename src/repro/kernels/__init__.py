@@ -4,7 +4,10 @@ Each kernel ships three files: ``kernel.py`` (pl.pallas_call + BlockSpec
 VMEM tiling), ``ops.py`` (the jit'd public wrapper with CPU-interpret
 fallback), ``ref.py`` (the pure-jnp oracle tests assert against).
 """
+from repro.kernels.detect_fused.ops import (
+    fused_abnormal, fused_non_scalable, fused_non_scalable_live)
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.ssd_scan.ops import ssd_scan
 
-__all__ = ["flash_attention", "ssd_scan"]
+__all__ = ["flash_attention", "ssd_scan", "fused_abnormal",
+           "fused_non_scalable", "fused_non_scalable_live"]

@@ -1,0 +1,12 @@
+"""Fused detection kernels: merge -> slope -> median -> top-k, one or
+two launches, with device-cached historical-scale columns (see
+``kernel.py`` for the Pallas kernels, ``ops.py`` for dispatch + the jnp
+fast path + launch counting, ``ref.py`` for the numpy oracle)."""
+from repro.kernels.detect_fused.ops import (
+    fused_abnormal, fused_non_scalable, fused_non_scalable_live,
+    launch_counts, merge_scale_column, reset_launch_counts)
+
+__all__ = [
+    "fused_abnormal", "fused_non_scalable", "fused_non_scalable_live",
+    "launch_counts", "merge_scale_column", "reset_launch_counts",
+]

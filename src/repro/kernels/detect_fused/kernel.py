@@ -1,0 +1,452 @@
+"""Fused detection Pallas kernels: merge -> slope -> median -> top-k.
+
+Two kernels cover the whole detection tail in one launch each:
+
+* ``ns_fused_kernel`` — the non-scalable half.  Grid ``(S, NP)`` with NP
+  (row tiles) innermost/sequential: per-scale merge accumulators (count,
+  sum, max, p0, inverse-variance sums) live in VMEM scratch and reduce
+  across row tiles; when a scale's last tile lands its (4, V) merged
+  column is written into the M scratch stack, and the final grid step
+  appends the (optional) device-cached historical columns, derives the
+  reference step time from the "max" row, and runs the closed-form
+  log-log slope fit + share/deviation flagging — all before leaving the
+  kernel.  One launch replaces the merge/stack/slope dispatch chain.
+* ``ab_fused_kernel`` — the abnormal half over one (P, V) time matrix
+  (live-gathered and zero-padded by ``ops``).  Grid ``(2, NV)``: phase 0
+  accumulates per-row step-time partials across column tiles; phase 1
+  computes the masked cross-process median per column via bitwise radix
+  *selection* (TPU Pallas has no sort primitive — the two middle order
+  statistics are found in ``nbits`` counting passes on the order-
+  preserving integer keys), flags abnormal entries, and runs a
+  tournament top-k (k max/argmin passes per tile, merged across tiles
+  through VMEM scratch) that reproduces the reference ranking exactly:
+  descending score, ties broken by ascending vid-major flat index.
+
+The pure-jnp merge/slope/flag formulas shared by the legacy stacked
+kernels (``repro.core.detect_jax``), the fused jnp fast path
+(``ops.py``), and the kernel bodies themselves are defined at the top of
+this module — single source of truth, so the three paths cannot drift.
+
+Everything is dtype-generic over f32/f64 (``SCALANA_DETECT_F32``); the
+float<->ordered-integer key bridge picks uint32/uint64 to match.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.detect import JIT_STRATEGIES, VAR_EPS
+
+_IMAX = JIT_STRATEGIES.index("max")
+_ROW_TILE = 1024          # ns kernel: rows per grid step
+_COL_TILE = 128           # ab kernel: vertex columns per grid step (lanes)
+_STEP_EPS = 1e-12         # step-time clamp, matches the host reference
+
+
+# -- shared detection math (jnp; used by legacy kernels, fused jnp path,
+# -- and inside the Pallas kernel bodies) -------------------------------
+
+def merge_all_stack(t: jax.Array, var: jax.Array) -> jax.Array:
+    """(S, P, V) times + variances -> (4, S, V) merged, rows ordered as
+    JIT_STRATEGIES.  Non-positive readings are dead (excluded)."""
+    pos = t > 0.0
+    cnt = pos.sum(axis=1)                              # (S, V)
+    any_pos = cnt > 0
+    total = jnp.where(pos, t, 0.0).sum(axis=1)
+    mean = jnp.where(any_pos, total / jnp.maximum(cnt, 1), 0.0)
+    mx = jnp.where(any_pos, t.max(axis=1), 0.0)
+    p0 = t[:, 0, :]
+    p0 = jnp.where(p0 > 0.0, p0, mean)
+    w = jnp.where(pos, 1.0 / (var + VAR_EPS), 0.0)
+    wsum = w.sum(axis=1)
+    varm = jnp.where(wsum > 0,
+                     (w * t).sum(axis=1) / jnp.where(wsum > 0, wsum, 1.0),
+                     0.0)
+    return jnp.stack([mean, mx, p0, varm])             # (4, S, V)
+
+
+def merge_blocks(ts, vs) -> jax.Array:
+    """One scale's per-host blocks -> its (4, V) merged column.
+
+    ``ts`` / ``vs`` are tuples of (n_local, V) blocks in global proc
+    order.  Every merge is an associative block-level reduction, so the
+    stacked matrix never materializes."""
+    pos = [t > 0.0 for t in ts]
+    cnt = sum(p.sum(axis=0) for p in pos)              # (V,)
+    total = sum(jnp.where(p, t, 0.0).sum(axis=0)
+                for p, t in zip(pos, ts))
+    mx_raw = jnp.stack([t.max(axis=0) for t in ts]).max(axis=0)
+    w = [jnp.where(p, 1.0 / (v + VAR_EPS), 0.0)
+         for p, v in zip(pos, vs)]
+    wsum = sum(wi.sum(axis=0) for wi in w)
+    wt = sum((wi * t).sum(axis=0) for wi, t in zip(w, ts))
+    any_pos = cnt > 0
+    mean = jnp.where(any_pos, total / jnp.maximum(cnt, 1), 0.0)
+    mx = jnp.where(any_pos, mx_raw, 0.0)
+    p0 = ts[0][0, :]
+    p0 = jnp.where(p0 > 0.0, p0, mean)
+    varm = jnp.where(wsum > 0,
+                     wt / jnp.where(wsum > 0, wsum, 1.0), 0.0)
+    return jnp.stack([mean, mx, p0, varm])             # (4, V)
+
+
+def slope_share_flag(M, logp, present, total_max,
+                     ideal_slope, slope_margin, min_share):
+    """(4, S, V) merged stack -> (slope, share, flagged), each (4, V).
+
+    ``share`` is guarded: an all-dead final scale (``total_max <= 0``)
+    yields share 0 — and so flags nothing — instead of inf/nan."""
+    valid = (M > 0.0) & present[None]
+    x = logp[None, :, None]                            # (1, S, 1)
+    Y = jnp.where(valid, jnp.log(jnp.where(valid, M, 1.0)), 0.0)
+    n = valid.sum(axis=1)                              # (4, V)
+    Sx = (x * valid).sum(axis=1)
+    Sy = Y.sum(axis=1)
+    Sxx = (x * x * valid).sum(axis=1)
+    Sxy = (x * Y).sum(axis=1)
+    denom = n * Sxx - Sx ** 2
+    num = n * Sxy - Sx * Sy
+    slope = jnp.where((denom != 0) & (n >= 2),
+                      num / jnp.where(denom != 0, denom, 1.0), 0.0)
+    share = jnp.where(total_max > 0.0,
+                      M[:, -1, :] / jnp.where(total_max > 0.0,
+                                              total_max, 1.0), 0.0)
+    flagged = ((M.sum(axis=1) > 0.0)
+               & (slope - ideal_slope > slope_margin)
+               & (share >= min_share))
+    return slope, share, flagged
+
+
+def abnormal_flags(t, typical, abnorm_thd, min_share, step_time):
+    """(P, V) times + (V,) typical -> (P, V) abnormal-entry mask."""
+    active = t.max(axis=0) > 0.0
+    over = ((t > abnorm_thd * typical) & (typical > 0.0)
+            & ((t - typical) / step_time >= min_share))
+    dead_typical = (typical == 0.0) & (t / step_time >= min_share)
+    return (over | dead_typical) & active
+
+
+# -- float <-> order-preserving integer keys ---------------------------
+
+def key_info(dtype) -> Tuple[jnp.dtype, int]:
+    """Unsigned key dtype + bit width for a float dtype."""
+    if jnp.dtype(dtype) == jnp.dtype(jnp.float64):
+        return jnp.dtype(jnp.uint64), 64
+    if jnp.dtype(dtype) == jnp.dtype(jnp.float32):
+        return jnp.dtype(jnp.uint32), 32
+    raise TypeError(f"unsupported detect dtype {dtype}")
+
+
+def to_key(x: jax.Array) -> jax.Array:
+    """Bitcast floats to unsigned keys whose integer order matches the
+    float total order (-inf < ... < +inf; only NaN maps to key 0/max).
+
+    Integer keys are the whole trick: XLA's single-operand integer sort
+    is ~13x faster than a float sort on CPU, and the Pallas median runs
+    bitwise radix selection, which needs integer keys anyway."""
+    u, bits = key_info(x.dtype)
+    b = jax.lax.bitcast_convert_type(x, u)
+    one = jnp.array(1, u)
+    sign = jnp.array(bits - 1, u)
+    return jnp.where((b >> sign) != 0, ~b, b | (one << sign))
+
+
+def from_key(k: jax.Array, dtype) -> jax.Array:
+    """Inverse of :func:`to_key`."""
+    u, bits = key_info(dtype)
+    one = jnp.array(1, u)
+    sign = jnp.array(bits - 1, u)
+    b = jnp.where((k >> sign) == 0, ~k, k & ~(one << sign))
+    return jax.lax.bitcast_convert_type(b, jnp.dtype(dtype))
+
+
+# -- non-scalable kernel ------------------------------------------------
+
+def _ns_kernel(t_ref, var_ref, hist_ref, logp_ref, present_ref, top_ref,
+               par_ref, m_out, slope_out, share_out, flag_out,
+               cnt, total, mx, wsum, wt, p0, m_scr,
+               *, n_data: int, n_hist: int):
+    s = pl.program_id(0)
+    p = pl.program_id(1)
+    np_ = pl.num_programs(1)
+    t = t_ref[0]                                       # (TP, V)
+    v = var_ref[0]
+
+    @pl.when(p == 0)
+    def _init_scale():
+        cnt[...] = jnp.zeros_like(cnt)
+        total[...] = jnp.zeros_like(total)
+        mx[...] = jnp.full_like(mx, -jnp.inf)
+        wsum[...] = jnp.zeros_like(wsum)
+        wt[...] = jnp.zeros_like(wt)
+        p0[...] = t[0:1, :]                            # true row 0: pad
+                                                       # rows are appended
+    pos = t > 0.0
+    cnt[...] += pos.astype(t.dtype).sum(axis=0, keepdims=True)
+    total[...] += jnp.where(pos, t, 0.0).sum(axis=0, keepdims=True)
+    mx[...] = jnp.maximum(mx[...], t.max(axis=0, keepdims=True))
+    w = jnp.where(pos, 1.0 / (v + VAR_EPS), 0.0)
+    wsum[...] += w.sum(axis=0, keepdims=True)
+    wt[...] += (w * t).sum(axis=0, keepdims=True)
+
+    @pl.when(p == np_ - 1)
+    def _scale_column():
+        any_pos = cnt[...] > 0
+        mean = jnp.where(any_pos, total[...] / jnp.maximum(cnt[...], 1.0),
+                         0.0)
+        mxv = jnp.where(any_pos, mx[...], 0.0)
+        p0v = jnp.where(p0[...] > 0.0, p0[...], mean)
+        varm = jnp.where(wsum[...] > 0,
+                         wt[...] / jnp.where(wsum[...] > 0, wsum[...], 1.0),
+                         0.0)
+        col = jnp.concatenate([mean, mxv, p0v, varm], axis=0)  # (4, V)
+        m_scr[:, pl.ds(s, 1), :] = col[:, None, :]
+
+    @pl.when((s == n_data - 1) & (p == np_ - 1))
+    def _tail():
+        M = m_scr[...]                                 # (4, n_data, V)
+        if n_hist:
+            M = jnp.concatenate([hist_ref[...], M], axis=1)
+        m_out[...] = M
+        par = par_ref[0]
+        internal = (M[_IMAX, -1, :] * top_ref[0]).sum()
+        total_max = jnp.where(par[4] > 0.0, par[3], internal)
+        slope, share, flagged = slope_share_flag(
+            M, logp_ref[...][:, 0], present_ref[...] > 0.0,
+            total_max, par[0], par[1], par[2])
+        slope_out[...] = slope
+        share_out[...] = share
+        flag_out[...] = flagged.astype(slope.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("n_hist", "interpret"))
+def ns_fused_kernel(t: jax.Array, var: jax.Array, hist: jax.Array,
+                    logp: jax.Array, present: jax.Array,
+                    top_mask: jax.Array, params: jax.Array,
+                    *, n_hist: int, interpret: bool = False):
+    """One-launch non-scalable detection.
+
+    t, var: (S_d, P, V) data scales (P padded to a row-tile multiple
+    with zero = dead rows; V padded to the lane tile).  hist: (4, H, V)
+    device-cached merged columns of completed scales, prepended to the
+    freshly merged data scales (pass a (4, 1, V) dummy with n_hist=0
+    when uncached).  logp: (S, 1) log process counts over ALL S =
+    n_hist + S_d scales; present: (S, V) 0/1; top_mask: (1, V) 0/1 root-
+    children columns; params: (1, 8) [ideal_slope, slope_margin,
+    min_share, total_max, use_total, 0, 0, 0].  Returns (M (4, S, V),
+    slope, share, flagged-as-float (4, V))."""
+    S_d, P, V = t.shape
+    TP = P if P <= _ROW_TILE else _ROW_TILE
+    assert P % TP == 0, (P, TP)
+    NP = P // TP
+    S_t = n_hist + S_d
+    dt = t.dtype
+    kernel = functools.partial(_ns_kernel, n_data=S_d, n_hist=n_hist)
+    return pl.pallas_call(
+        kernel,
+        grid=(S_d, NP),
+        in_specs=[
+            pl.BlockSpec((1, TP, V), lambda s, p: (s, p, 0)),
+            pl.BlockSpec((1, TP, V), lambda s, p: (s, p, 0)),
+            pl.BlockSpec((4, max(n_hist, 1), V), lambda s, p: (0, 0, 0)),
+            pl.BlockSpec((S_t, 1), lambda s, p: (0, 0)),
+            pl.BlockSpec((S_t, V), lambda s, p: (0, 0)),
+            pl.BlockSpec((1, V), lambda s, p: (0, 0)),
+            pl.BlockSpec((1, 8), lambda s, p: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((4, S_t, V), lambda s, p: (0, 0, 0)),
+            pl.BlockSpec((4, V), lambda s, p: (0, 0)),
+            pl.BlockSpec((4, V), lambda s, p: (0, 0)),
+            pl.BlockSpec((4, V), lambda s, p: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((4, S_t, V), dt),
+            jax.ShapeDtypeStruct((4, V), dt),
+            jax.ShapeDtypeStruct((4, V), dt),
+            jax.ShapeDtypeStruct((4, V), dt),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, V), dt) for _ in range(6)]
+        + [pltpu.VMEM((4, S_d, V), dt)],
+        interpret=interpret,
+    )(t, var, hist, logp, present, top_mask, params)
+
+
+# -- abnormal kernel ----------------------------------------------------
+
+def _select_rank(keys: jax.Array, rank: jax.Array, nbits: int) -> jax.Array:
+    """Per-column rank-``rank`` order statistic of integer keys.
+
+    MSB-first radix selection: ``eq`` tracks the rows still matching the
+    decided high bits; each pass counts how many of those have the
+    current bit clear and descends left or right.  ``nbits`` counting
+    passes over the (P, TV) tile — no sort primitive needed, which is
+    what lets the median run inside a TPU Pallas kernel at all."""
+    u = keys.dtype
+    one = jnp.array(1, u)
+    prefix = jnp.zeros((1, keys.shape[1]), u)
+    rr = jnp.full((1, keys.shape[1]), rank, jnp.int32)
+    eq = jnp.ones(keys.shape, jnp.bool_)
+
+    def body(i, st):
+        prefix, rr, eq = st
+        bit = jnp.array(nbits - 1, jnp.int32) - i
+        kb = ((keys >> bit.astype(u)) & one) != 0      # (P, TV)
+        cnt0 = (eq & ~kb).sum(axis=0, keepdims=True, dtype=jnp.int32)
+        go = rr >= cnt0                                # (1, TV)
+        prefix = jnp.where(go, prefix | (one << bit.astype(u)), prefix)
+        rr = jnp.where(go, rr - cnt0, rr)
+        eq = eq & (kb == go)
+        return prefix, rr, eq
+
+    prefix, _, _ = jax.lax.fori_loop(0, nbits, body, (prefix, rr, eq))
+    return prefix                                      # (1, TV)
+
+
+def _extract_topk(skeys, sidx, seed_keys, seed_idx, k: int):
+    """k rounds of (max key, min index among maxes) extraction, seeded
+    with the running cross-tile best; extracted entries drop to key 0
+    (strictly below every real score key, -inf included)."""
+    u = skeys.dtype
+    imax = jnp.iinfo(jnp.int32).max
+
+    def body(i, st):
+        sk, si, ok, oi = st
+        m = sk.max()
+        pick = jnp.where(sk == m, si, imax).min()
+        sk = jnp.where((sk == m) & (si == pick), jnp.array(0, u), sk)
+        return sk, si, ok.at[i].set(m), oi.at[i].set(pick)
+
+    ok = jnp.zeros((k,), u)
+    oi = jnp.full((k,), imax, jnp.int32)
+    sk = jnp.concatenate([skeys.reshape(-1), seed_keys])
+    si = jnp.concatenate([sidx.reshape(-1), seed_idx])
+    _, _, ok, oi = jax.lax.fori_loop(0, k, body, (sk, si, ok, oi))
+    return ok, oi
+
+
+def _ab_kernel(t_ref, valid_ref, top_ref, par_ref,
+               order_out, score_out, count_out, typ_out,
+               step_scr, step_val, best_k, best_i, cnt_scr,
+               *, k: int, nv: int, tv: int, nbits: int):
+    ph = pl.program_id(0)
+    cv = pl.program_id(1)
+    t = t_ref[...]                                     # (P, TV)
+    validf = valid_ref[...]                            # (P, 1)
+    vb = validf > 0.0
+    dt = t.dtype
+    u, _ = key_info(dt)
+
+    @pl.when((ph == 0) & (cv == 0))
+    def _init_step():
+        step_scr[...] = jnp.zeros_like(step_scr)
+
+    @pl.when(ph == 0)
+    def _accum_step():
+        step_scr[...] += (t * top_ref[...]).sum(axis=1, keepdims=True)
+
+    @pl.when((ph == 0) & (cv == nv - 1))
+    def _finish_step():
+        par = par_ref[0]
+        sv = jnp.where(vb[:, 0], step_scr[...][:, 0], 0.0).max()
+        sv = jnp.where(sv > 0.0, sv, jnp.array(_STEP_EPS, dt))
+        step_val[0, 0] = jnp.where(par[3] > 0.0, par[2], sv)
+
+    @pl.when(ph == 1)
+    def _detect():
+        par = par_ref[0]
+        abnorm_thd, min_share = par[0], par[1]
+        step = step_val[0, 0]
+        n_live = jnp.maximum(validf.sum(), 1.0).astype(jnp.int32)
+        keys = jnp.where(vb, to_key(t), to_key(jnp.full_like(t, jnp.inf)))
+        lo = from_key(_select_rank(keys, (n_live - 1) // 2, nbits), dt)
+        hi = from_key(_select_rank(keys, n_live // 2, nbits), dt)
+        typical = 0.5 * (lo + hi)                      # (1, TV)
+        typ_out[...] = typical
+        tm = jnp.where(vb, t, 0.0)
+        flags = abnormal_flags(tm, typical[0], abnorm_thd, min_share,
+                               step) & vb
+        add = flags.sum(dtype=jnp.int32)
+        cnt_scr[0, 0] = jnp.where(cv == 0, add, cnt_scr[0, 0] + add)
+
+        neg = to_key(jnp.full_like(t, -jnp.inf))
+        skeys = jnp.where(flags, to_key(tm - typical), neg)
+        P = t.shape[0]
+        rows = jax.lax.broadcasted_iota(jnp.int32, skeys.shape, 0)
+        cols = jax.lax.broadcasted_iota(jnp.int32, skeys.shape, 1)
+        lidx = (cv * tv + cols) * P + rows             # global vid-major
+
+        imax = jnp.iinfo(jnp.int32).max
+        seed_k = jnp.where(cv == 0, jnp.zeros((k,), u), best_k[0])
+        seed_i = jnp.where(cv == 0, jnp.full((k,), imax, jnp.int32),
+                           best_i[0])
+        ok, oi = _extract_topk(skeys, lidx, seed_k, seed_i, k)
+        best_k[...] = ok[None]
+        best_i[...] = oi[None]
+
+        @pl.when(cv == nv - 1)
+        def _emit():
+            order_out[...] = best_i[...]
+            score_out[...] = from_key(best_k[...], dt)
+            count_out[0, 0] = cnt_scr[0, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def ab_fused_kernel(t: jax.Array, valid: jax.Array, top_mask: jax.Array,
+                    params: jax.Array, *, k: int, interpret: bool = False):
+    """One-launch abnormal detection over a (P, V) time matrix.
+
+    valid: (P, 1) 0/1 live-row mask (degraded fleets; all-ones
+    otherwise).  top_mask: (1, V) 0/1 step-time columns.  params: (1, 8)
+    [abnorm_thd, min_share, step_time, use_step, 0...].  V must be a
+    lane-tile multiple (ops pads with zero columns — dead, never
+    flagged, and their -inf scores rank after every real entry).
+    Returns (order (1, k) int32 flat vid-major, scores (1, k), count
+    (1, 1) int32, typical (1, V)); entries past the flagged count are
+    the reference's -inf tail, exactly as the stable argsort yields.
+
+    The whole fleet's rows sit in one VMEM block per column tile —
+    (P, 128) f32 at 64k procs is 32 MB, so beyond ~32k procs use f32 or
+    shrink the column tile; row-tiled median is future work."""
+    P, V = t.shape
+    tv = V if V <= _COL_TILE else _COL_TILE
+    assert V % tv == 0, (V, tv)
+    nv = V // tv
+    dt = t.dtype
+    u, nbits = key_info(dt)
+    kernel = functools.partial(_ab_kernel, k=k, nv=nv, tv=tv, nbits=nbits)
+    return pl.pallas_call(
+        kernel,
+        grid=(2, nv),
+        in_specs=[
+            pl.BlockSpec((P, tv), lambda ph, cv: (0, cv)),
+            pl.BlockSpec((P, 1), lambda ph, cv: (0, 0)),
+            pl.BlockSpec((1, tv), lambda ph, cv: (0, cv)),
+            pl.BlockSpec((1, 8), lambda ph, cv: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, k), lambda ph, cv: (0, 0)),
+            pl.BlockSpec((1, k), lambda ph, cv: (0, 0)),
+            pl.BlockSpec((1, 1), lambda ph, cv: (0, 0)),
+            pl.BlockSpec((1, tv), lambda ph, cv: (0, cv)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, k), jnp.int32),
+            jax.ShapeDtypeStruct((1, k), dt),
+            jax.ShapeDtypeStruct((1, 1), jnp.int32),
+            jax.ShapeDtypeStruct((1, V), dt),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((P, 1), dt),
+            pltpu.VMEM((1, 1), dt),
+            pltpu.VMEM((1, k), u),
+            pltpu.VMEM((1, k), jnp.int32),
+            pltpu.VMEM((1, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(t, valid, top_mask, params)

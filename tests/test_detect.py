@@ -1,4 +1,6 @@
 """Problematic-vertex detection (§IV-A): unit + property tests."""
+import sys
+
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
@@ -153,6 +155,29 @@ def test_env_backend_validated_and_attributed(monkeypatch):
         detect_abnormal(ppg)
     monkeypatch.setenv("SCALANA_DETECT_BACKEND", "numpy")
     detect_abnormal(ppg)                       # valid value passes through
+
+
+def test_auto_backend_prefers_numpy_on_cpu_only_jax(monkeypatch):
+    """Merely having jax importable must no longer flip auto onto the
+    jitted path: on CPU-only jax with host-side stores the dispatch
+    overhead makes it ~10x slower than numpy.  auto picks jax only when
+    the data is device-resident (device_live) or a real accelerator is
+    the default backend; explicit 'jax' (arg or env) still forces it."""
+    jax = pytest.importorskip("jax")
+    from repro.core.detect import _resolve_backend
+
+    monkeypatch.delenv("SCALANA_DETECT_BACKEND", raising=False)
+    if jax.default_backend() != "cpu":
+        pytest.skip("accelerator present; auto legitimately routes to jax")
+    assert "jax" in sys.modules
+    assert _resolve_backend("auto") is None
+    assert _resolve_backend(None) is None
+    # a live DeviceShardView opts auto back into the jitted path
+    assert _resolve_backend("auto", device_live=True) is not None
+    # explicit request always wins over the CPU heuristic
+    assert _resolve_backend("jax") is not None
+    monkeypatch.setenv("SCALANA_DETECT_BACKEND", "jax")
+    assert _resolve_backend(None) is not None
 
 
 def test_proc_mask_excludes_rows_exactly():
