@@ -2,7 +2,7 @@ PYTHONPATH := src:.
 export PYTHONPATH
 
 .PHONY: check test smoke bench bench-smoke docs-check chaos-smoke \
-	scenario-smoke scenario-smoke-jax detect-fused-smoke
+	scenario-smoke scenario-smoke-jax detect-fused-smoke run-store-smoke
 
 test:
 	python -m pytest -x -q
@@ -47,11 +47,20 @@ scenario-smoke-jax:
 detect-fused-smoke:
 	python tools/detect_fused_smoke.py
 
+# the multi-run regression store end-to-end (jax-free): clean-vs-faulted
+# scenario runs recorded + diffed with asserted flagging precision, and
+# a 65536-proc clustered record/diff with the regressed cluster required
+# to contain the true culprit procs; writes run-store-smoke.txt
+# (uploaded as a CI artifact)
+run-store-smoke:
+	python tools/run_store_smoke.py
+
 # tier-1 tests + the graph-core smoke benchmark (perf regressions fail
 # loudly) + executable documentation + the monitor chaos smoke + the
-# scenario-bank accuracy smoke + the fused-kernel interpret smoke
+# scenario-bank accuracy smoke + the fused-kernel interpret smoke + the
+# run-store regression-service smoke
 check: test bench-smoke docs-check chaos-smoke scenario-smoke \
-	detect-fused-smoke
+	detect-fused-smoke run-store-smoke
 
 bench:
 	python -m benchmarks.run

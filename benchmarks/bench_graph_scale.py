@@ -55,7 +55,15 @@ scale:
     streaming versioned wire frames through shared real TCP connections
     into one ``SocketServer`` + resident ``Monitor``, asserted bit-
     identical to one-shot detection, with the wire-level delta
-    compression ratio priced against a full-row baseline.
+    compression ratio priced against a full-row baseline;
+  * ``run_store_record_s`` / ``run_store_load_s`` / ``run_store_diff_s``
+    — the persistent regression service priced per scale (record the
+    faulted series + detect output through the checkpoint seam, reload,
+    cross-run diff; the same-run diff asserted quiet), plus a
+    ``run_store_fleet`` row: a 65536-proc clean/slowed pair clustered to
+    <= 64 behavior representatives on record and diffed, with >= 100x
+    row compression asserted on full runs and the regressed cluster
+    required to contain every true culprit proc.
 
 ``run`` returns the rows as dicts; ``benchmarks/run.py`` snapshots them to
 ``BENCH_graph_scale.json`` so the perf trajectory is machine-readable
@@ -169,6 +177,125 @@ def build_p2p_heavy_psg(n_comp: int = 8, n_procs_hint: int = 8,
     g.add_edge(prev, ar.vid, "data")
     g.add_edge(root.vid, ar.vid, "control")
     return g
+
+
+def build_fleet_ppg(psg, n_procs: int, slow: float = 1.0):
+    """A fleet-scale PPG written straight into a PerfStore (replaying at
+    65536 procs is not the point here): comp columns with deterministic
+    per-proc jitter, the heaviest vertex slowed ``slow``x on the culprit
+    procs (every 1024th-plus-7), one global collective group.  Shared
+    with ``tools/run_store_smoke.py``.
+
+    Returns (ppg, slowed_vid, culprit_proc_set)."""
+    from repro.core.graph import PPG
+
+    ppg = PPG(psg, n_procs)
+    procs = np.arange(n_procs)
+    culprits = procs[procs % 1024 == 7]
+    comp = [v.vid for v in psg.vertices if v.kind == COMP]
+    heavy = comp[len(comp) // 2]
+    for i, vid in enumerate(comp):
+        t = np.full(n_procs, 1e-3 * (1 + i % 3))
+        t *= 1.0 + 1e-4 * ((procs * 2654435761 % 97) / 97.0)  # jitter
+        if vid == heavy and slow != 1.0:
+            t[culprits] *= slow
+        ppg.perf.set_column(vid, t, counters={"flops": 1e9})
+    for v in psg.vertices:
+        if v.kind == COMM:
+            ppg.perf.set_column(v.vid, np.full(n_procs, 1e-4))
+            ppg.comm.add_group(v.vid, tuple(range(n_procs)))
+    return ppg, heavy, set(culprits.tolist())
+
+
+def bench_run_store(series, ns, ab):
+    """Price the regression service per scale: record the faulted series
+    (scaling curves + detect output) into a throwaway RunStore through
+    the checkpoint seam, reload it, and diff two records of the same
+    run.  Returns (record_s, load_s, diff_s); the same-run diff is
+    asserted quiet and the detect output asserted to survive the disk
+    round trip."""
+    import tempfile
+
+    from repro.runs import RunStore, diff_runs
+
+    detect = {"non_scalable": ns, "abnormal": ab}
+    with tempfile.TemporaryDirectory() as d:
+        store = RunStore(d)
+        t0 = time.perf_counter()
+        rid = store.record(series=series, detect=detect)
+        record_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        a = store.load(rid)
+        load_s = time.perf_counter() - t0
+        b = store.load(store.record(series=series, detect=detect))
+        t0 = time.perf_counter()
+        diff = diff_runs(a, b)
+        diff_s = time.perf_counter() - t0
+    assert not diff.regressions, \
+        f"same-run diff flagged {len(diff.regressions)} regressions"
+    assert a.detect is not None and \
+        [d.vid for d in a.detect["non_scalable"]] == [d.vid for d in ns] \
+        and [(x.proc, x.vid) for x in a.detect["abnormal"]] \
+        == [(x.proc, x.vid) for x in ab], \
+        "detect output did not survive the run-store round trip"
+    return record_s, load_s, diff_s
+
+
+def bench_run_store_fleet(n_procs: int, max_clusters: int = 64,
+                          smoke: bool = False) -> Dict:
+    """Clustered record + cross-run diff at fleet scale: a clean and a
+    culprit-slowed PPG are each compressed to <= ``max_clusters``
+    behavior representatives on record, then diffed; the regressed
+    cluster must contain every true culprit proc, and on full runs the
+    row compression is asserted >= 100x at 65536 procs."""
+    import tempfile
+
+    from repro.runs import RunStore, diff_runs, regressed_cluster
+
+    psg = build_step_psg(n_comp=12, n_procs_hint=8)
+    t0 = time.perf_counter()
+    good, heavy, culprits = build_fleet_ppg(psg, n_procs, slow=1.0)
+    bad, _, _ = build_fleet_ppg(psg, n_procs, slow=2.5)
+    fleet_build_s = time.perf_counter() - t0
+
+    with tempfile.TemporaryDirectory() as d:
+        store = RunStore(d)
+        t0 = time.perf_counter()
+        a = store.load(store.record(ppg=good, cluster=max_clusters))
+        b = store.load(store.record(ppg=bad, cluster=max_clusters))
+        record_cluster_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        diff = diff_runs(a, b)
+        diff_s = time.perf_counter() - t0
+
+    reps = b.clustering.n_clusters
+    compression = b.clustering.compression()
+    k = regressed_cluster(b, diff)
+    members = set(b.clustering.members(k).tolist()) if k is not None \
+        else set()
+    assert reps <= max_clusters, \
+        f"{reps} representatives > cap {max_clusters}"
+    assert heavy in diff.regressed_vids, \
+        "clustered diff missed the slowed vertex"
+    assert k is not None and culprits <= members, \
+        f"regressed cluster {k} missing culprits: " \
+        f"{len(culprits & members)}/{len(culprits)}"
+    if not smoke:
+        assert compression >= 100.0, \
+            f"clustered store compression {compression:.0f}x < 100x " \
+            f"at {n_procs} procs"
+    return {
+        "name": f"graph_scale/run_store_fleet/{n_procs}procs",
+        "n_procs": n_procs,
+        "run_store_fleet_build_s": fleet_build_s,
+        "run_store_cluster_record_s": record_cluster_s,
+        "run_store_fleet_diff_s": diff_s,
+        "run_store_reps": reps,
+        "run_store_compression": compression,
+        "run_store_regressed_cluster": -1 if k is None else int(k),
+        "run_store_culprits": len(culprits),
+        "run_store_culprits_in_cluster": len(culprits & members),
+    }
 
 
 def bench_monitor(psg, target: int, straggler: int, n_procs: int,
@@ -704,6 +831,13 @@ def run(smoke: bool = False) -> List[Dict]:
          monitor_hosts, monitor_faulty_hosts) = bench_monitor(
             psg, target, straggler, n_procs, detect_backend)
 
+        # -- run store: record / reload / diff latency per scale ---------
+        # the persistent regression service priced on this scale's
+        # series: one record through the checkpoint seam (curves +
+        # detect output + top-scale PPG), one reload, one cross-run diff
+        (run_store_record_s, run_store_load_s,
+         run_store_diff_s) = bench_run_store(series, ns, ab)
+
         nbytes = top.nbytes()
         comm_nbytes = top.comm.nbytes()
         clique_nbytes = 16 * sum(
@@ -747,6 +881,9 @@ def run(smoke: bool = False) -> List[Dict]:
             "monitor_faulty_ingest_detect_s": monitor_faulty_ingest_detect_s,
             "monitor_hosts": monitor_hosts,
             "monitor_faulty_hosts": monitor_faulty_hosts,
+            "run_store_record_s": run_store_record_s,
+            "run_store_load_s": run_store_load_s,
+            "run_store_diff_s": run_store_diff_s,
             "device_full_bytes": device_full_bytes,
             "device_dirty_bytes": device_dirty_bytes,
             "device_dirty_rows": device_dirty_rows,
@@ -783,6 +920,9 @@ def run(smoke: bool = False) -> List[Dict]:
              f"{monitor_faulty_ingest_detect_s:.4f};"
              f"monitor_hosts={monitor_hosts};"
              f"monitor_faulty_hosts={monitor_faulty_hosts};"
+             f"run_store_record_s={run_store_record_s:.4f};"
+             f"run_store_load_s={run_store_load_s:.4f};"
+             f"run_store_diff_s={run_store_diff_s:.4f};"
              f"device_full_bytes={device_full_bytes};"
              f"device_dirty_bytes={device_dirty_bytes};"
              f"device_dirty_rows={device_dirty_rows};"
@@ -811,6 +951,26 @@ def run(smoke: bool = False) -> List[Dict]:
              f"fullrow_bytes={srow['socket_fullrow_bytes']};"
              f"wire_ratio={srow['socket_wire_ratio']:.3f};"
              f"steady_ratio={srow['socket_steady_ratio']:.3f}")
+
+    # -- run store at fleet scale: clustered record + cross-run diff --
+    # a 65536-proc clean/slowed pair (2048 in smoke) compressed to <= 64
+    # behavior representatives on record, then diffed; compression is
+    # asserted >= 100x on full runs and the regressed cluster must hold
+    # every true culprit proc
+    fleet_procs = 2048 if smoke else 65536
+    frow = bench_run_store_fleet(fleet_procs, smoke=smoke)
+    rows.append(frow)
+    emit(frow["name"],
+         (frow["run_store_cluster_record_s"]
+          + frow["run_store_fleet_diff_s"]) * 1e6,
+         f"build_s={frow['run_store_fleet_build_s']:.4f};"
+         f"cluster_record_s={frow['run_store_cluster_record_s']:.4f};"
+         f"diff_s={frow['run_store_fleet_diff_s']:.4f};"
+         f"reps={frow['run_store_reps']};"
+         f"compression={frow['run_store_compression']:.0f};"
+         f"regressed_cluster={frow['run_store_regressed_cluster']};"
+         f"culprits_in_cluster={frow['run_store_culprits_in_cluster']}"
+         f"/{frow['run_store_culprits']}")
     return rows
 
 

@@ -34,7 +34,11 @@ import traceback
 def write_snapshot(path: str, rows, smoke: bool) -> None:
     if not path or not rows:
         return
-    payload = {"bench": "graph_scale", "smoke": smoke, "rows": rows}
+    # stamped with the run-store schema (schema_version / commit /
+    # wall_time / timestamp) so a BENCH snapshot ingests directly as
+    # RunStore run metadata
+    from repro.runs.store import run_metadata
+    payload = run_metadata(bench="graph_scale", smoke=smoke, rows=rows)
     pathlib.Path(path).write_text(json.dumps(payload, indent=2) + "\n")
     print(f"wrote {path} ({len(rows)} rows)", file=sys.stderr)
 

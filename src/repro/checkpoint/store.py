@@ -83,15 +83,41 @@ def _to_host(leaf) -> np.ndarray:
 def _flatten_plain(tree: Pytree, prefix: List[str],
                    out: List[Tuple[str, Any]]) -> None:
     """dict/list/tuple flattening matching jax's path order (dict keys
-    sorted), so both flatteners produce the same manifest keys."""
+    sorted), so both flatteners produce the same manifest keys.
+
+    Dict keys may not contain "/" — manifest keys are slash-joined
+    paths, and a slashed key would silently restore as a nested dict in
+    the template-free loader."""
     if isinstance(tree, dict):
         for k in sorted(tree):
+            if "/" in str(k):
+                raise ValueError(f"checkpoint dict key {k!r} contains '/'")
             _flatten_plain(tree[k], prefix + [str(k)], out)
     elif isinstance(tree, (list, tuple)):
         for i, v in enumerate(tree):
             _flatten_plain(v, prefix + [str(i)], out)
     else:
         out.append(("/".join(prefix), tree))
+
+
+def _empty_containers(tree: Pytree, prefix: List[str],
+                      out: List[Tuple[str, str]]) -> None:
+    """Paths of empty dict/list/tuple nodes in a plain tree.
+
+    An empty container produces no leaves, so without recording it the
+    template-free loader would rebuild the tree WITHOUT that node — a
+    round-trip that silently drops e.g. a counter-less store's
+    ``"counters": {}``."""
+    if isinstance(tree, dict):
+        if not tree:
+            out.append(("/".join(prefix), "dict"))
+        for k in sorted(tree):
+            _empty_containers(tree[k], prefix + [str(k)], out)
+    elif isinstance(tree, (list, tuple)):
+        if not tree:
+            out.append(("/".join(prefix), "list"))
+        for i, v in enumerate(tree):
+            _empty_containers(v, prefix + [str(i)], out)
 
 
 def _flatten_with_paths(tree: Pytree) -> List[Tuple[str, Any]]:
@@ -146,6 +172,11 @@ def save_checkpoint(directory: str, step: int, tree: Pytree,
         "leaves": {},
         "meta": extra_meta or {},
     }
+    if _is_plain(tree):
+        empties: List[Tuple[str, str]] = []
+        _empty_containers(tree, [], empties)
+        if empties:
+            manifest["empty"] = {path: kind for path, kind in empties}
     arrays: Dict[str, np.ndarray] = {}
     for i, (key, leaf) in enumerate(leaves):
         arr = _to_host(leaf)
@@ -222,6 +253,15 @@ def load_checkpoint_tree(directory: str, step: int) -> Tuple[Pytree, dict]:
         for p in parts[:-1]:
             node = node.setdefault(p, {})
         node[parts[-1]] = npz[ent["file"]]
+    for key, kind in manifest.get("empty", {}).items():
+        child: Any = {} if kind == "dict" else []
+        if key == "":
+            return child, manifest.get("meta", {})
+        parts = key.split("/")
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = child
     return tree, manifest.get("meta", {})
 
 

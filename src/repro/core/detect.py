@@ -260,6 +260,15 @@ def _fit_slopes(scales: Sequence[int], M: np.ndarray,
     return np.where(n >= 2, slope, 0.0)
 
 
+def fit_slopes(scales: Sequence[int], M: np.ndarray,
+               valid: np.ndarray) -> np.ndarray:
+    """Public batched slope fit: (S, V) merged times -> (V,) log-log
+    slopes.  The cross-run diff (``repro.runs.diff``) reuses this exact
+    machinery per run; the jax backend provides the same contract as
+    ``detect_jax.fit_slopes`` behind :func:`_resolve_backend`."""
+    return _fit_slopes(scales, np.asarray(M, float), np.asarray(valid, bool))
+
+
 def detect_non_scalable(series: Mapping[int, PPG], *,
                         ideal_slope: float = -1.0,
                         slope_margin: float = 0.35,

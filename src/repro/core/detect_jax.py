@@ -125,6 +125,24 @@ if HAS_JAX:
     def _abnormal_kernel(t, typical, abnorm_thd, min_share, step_time):
         return _abnormal_flags(t, typical, abnorm_thd, min_share, step_time)
 
+    @jax.jit
+    def _fit_slopes_kernel(logp, M, valid):
+        """Batched masked least-squares slope per column — the jitted
+        twin of ``detect._fit_slopes`` (same formulas, same <2-point
+        clamp to 0.0)."""
+        x = logp[:, None]                              # (S, 1)
+        Y = jnp.where(valid, jnp.log(jnp.where(valid, M, 1.0)), 0.0)
+        n = valid.sum(axis=0)
+        Sx = (x * valid).sum(axis=0)
+        Sy = Y.sum(axis=0)
+        Sxx = (x * x * valid).sum(axis=0)
+        Sxy = (x * Y).sum(axis=0)
+        denom = n * Sxx - Sx ** 2
+        num = n * Sxy - Sx * Sy
+        safe = jnp.where(denom != 0, denom, 1.0)
+        slope = jnp.where(denom != 0, num / safe, 0.0)
+        return jnp.where(n >= 2, slope, 0.0)
+
     def _median_flags_topk(t, abnorm_thd, min_share, step_time, k):
         """Fused median + flags + device-side top-k selection — the one
         ranking implementation both the host-fed and the device-block
@@ -224,6 +242,21 @@ def merge_matrix(t: np.ndarray, strategy: str,
                          else np.asarray(var, dtype)[None])
         out = _merge_all_kernel(td, vd)
     return np.asarray(out)[si, 0]
+
+
+def fit_slopes(scales: Sequence[int], M: np.ndarray,
+               valid: np.ndarray) -> np.ndarray:
+    """Jitted batched log-log slope fit: (S, V) merged times -> (V,).
+
+    The jax side of ``detect.fit_slopes`` — the cross-run diff resolves
+    between the two through ``detect._resolve_backend``."""
+    dtype, ctx = _precision()
+    with ctx:
+        out = _fit_slopes_kernel(
+            jnp.asarray(np.log(np.asarray(scales, dtype))),
+            jnp.asarray(np.asarray(M, dtype)),
+            jnp.asarray(np.asarray(valid, bool)))
+    return np.asarray(out)
 
 
 def non_scalable_arrays(scales: Sequence[int], t: np.ndarray, var: np.ndarray,

@@ -50,6 +50,29 @@ def pairs_array(pairs) -> np.ndarray:
         return pairs.reshape(-1, 2).astype(np.intp, copy=False)
     return np.asarray(pairs, np.intp).reshape(-1, 2)
 
+
+def check_tree_format(meta: Optional[Mapping[str, Any]], expect: str,
+                      latest: int) -> int:
+    """Validate a ``to_tree`` meta header and return its version.
+
+    Every serializable graph object stamps its meta with
+    ``{"format": <name>, "version": <int>}``; loaders call this first so
+    a tree saved by a NEWER layout fails loudly instead of reloading
+    garbage.  ``meta`` may be ``None`` or headerless (snapshots written
+    before the seam was versioned): those are treated as version 1 of
+    the expected format — the pre-versioning layout is identical.
+    """
+    if not meta:
+        return 1
+    fmt = meta.get("format", expect)
+    if fmt != expect:
+        raise ValueError(f"tree format {fmt!r}, expected {expect!r}")
+    version = int(meta.get("version", 1))
+    if version < 1 or version > latest:
+        raise ValueError(f"{expect} tree version {version} unsupported "
+                         f"(latest known: {latest})")
+    return version
+
 # collective primitives / HLO ops treated as Comm vertices
 COLLECTIVE_PRIMS = {
     "psum", "pmax", "pmin", "all_gather", "all_gather_invariant",
@@ -269,6 +292,24 @@ class PSG:
         """Serialized storage footprint (paper Table I 'storage cost')."""
         return len(self.to_json().encode())
 
+    # -- checkpoint-tree seam ------------------------------------------
+    def to_tree(self) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+        """(tree, meta): the graph as a checkpoint-friendly pytree.
+
+        The JSON form rides in a single uint8 leaf (checkpoint leaves
+        are arrays, not strings); meta carries the versioned format
+        header.  Round-trips through :meth:`from_tree` bit-identically.
+        """
+        data = np.frombuffer(self.to_json().encode(), np.uint8).copy()
+        return {"json": data}, {"format": "psg", "version": 1}
+
+    @classmethod
+    def from_tree(cls, tree: Mapping[str, Any],
+                  meta: Optional[Mapping[str, Any]] = None) -> "PSG":
+        check_tree_format(meta, "psg", 1)
+        data = np.asarray(tree["json"], np.uint8)
+        return cls.from_json(data.tobytes().decode())
+
 
 # ---------------------------------------------------------------------------
 # PPG
@@ -379,6 +420,32 @@ class CounterColumns:
         if keep.any():
             out[:, vids[keep]] = np.where(mask[:, keep], values[:, keep], 0.0)
         return out
+
+    # -- checkpoint-tree seam ------------------------------------------
+    def to_tree(self) -> Dict[str, np.ndarray]:
+        """The compressed block as a pytree: (k,) vids + (n_procs, k)
+        values/mask — the column-sparse layout goes to disk as-is, never
+        densified to (n_procs, V)."""
+        vids, values, mask = self.columns()
+        return {"vids": vids.copy(), "values": values.copy(),
+                "mask": mask.copy()}
+
+    def load_tree(self, tree: Mapping[str, Any]) -> None:
+        """Replace this counter's columns with a :meth:`to_tree` block
+        (``n_procs`` stays; saved rows beyond it grow the store first)."""
+        vids = np.asarray(tree["vids"], np.int64)
+        values = np.asarray(tree["values"], float)
+        mask = np.asarray(tree["mask"], bool)
+        k = int(vids.size)
+        rows = values.shape[0]
+        self.vids = [int(v) for v in vids.tolist()]
+        self.slot_of = {v: i for i, v in enumerate(self.vids)}
+        cap = max(k, 4)
+        self.values = np.zeros((self.n_procs, cap))
+        self.mask = np.zeros((self.n_procs, cap), bool)
+        if k:
+            self.values[:rows, :k] = values
+            self.mask[:rows, :k] = mask
 
     def nbytes(self) -> int:
         k = len(self.vids)
@@ -702,37 +769,45 @@ class PerfStore:
             cc.values[np.ix_(rows, slots)] = values
             cc.mask[np.ix_(rows, slots)] = mask
 
-    # -- whole-store state (snapshot / restore seam) -------------------
-    def state_arrays(self) -> Tuple[Dict[str, Any], Dict[str, Any]]:
-        """(arrays, meta): the store's full state as plain numpy arrays.
+    # -- whole-store state (the ONE persistence seam) ------------------
+    TREE_FORMAT = "perfstore"
+    TREE_VERSION = 1
 
-        ``arrays`` is a nested dict (checkpoint-friendly pytree) of
-        copies; ``meta`` holds the JSON-serializable layout (row/column
+    def to_tree(self) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+        """(tree, meta): the store's full state as plain numpy arrays.
+
+        ``tree`` is a nested dict (checkpoint-friendly pytree) of
+        copies, counters column-sparse; ``meta`` holds the
+        JSON-serializable layout (versioned format header, row/column
         counts, counter names by index).  Together they round-trip
-        through :meth:`load_state` bit-identically — the monitor's crash
-        snapshot is one ``state_arrays()`` per shard."""
+        through :meth:`load_tree` / :meth:`from_tree` bit-identically.
+        This is the single persistence path: the monitor's crash
+        snapshot and the run store both write one ``to_tree()`` per
+        store/shard through ``repro.checkpoint.store``.
+        """
         names = list(self._counters)
-        arrays: Dict[str, Any] = {
+        tree: Dict[str, Any] = {
             "time": self.time.copy(), "time_var": self.time_var.copy(),
             "samples": self.samples.copy(), "mask": self._mask.copy(),
-            "counters": {},
+            "counters": {f"c{i}": self._counters[name].to_tree()
+                         for i, name in enumerate(names)},
         }
-        for i, name in enumerate(names):
-            vids, values, mask = self._counters[name].columns()
-            arrays["counters"][f"c{i}"] = {
-                "vids": vids.copy(), "values": values.copy(),
-                "mask": mask.copy()}
-        meta = {"n_procs": int(self.n_procs), "n_cols": int(self._cols),
-                "counter_names": names}
-        return arrays, meta
+        meta = self._tree_meta()
+        meta["counter_names"] = names
+        return tree, meta
 
-    def load_state(self, arrays: Mapping[str, Any],
-                   meta: Mapping[str, Any]) -> None:
-        """Restore the state captured by :meth:`state_arrays` into this
-        store (dimensions grow as needed; prior contents are replaced).
+    def _tree_meta(self) -> Dict[str, Any]:
+        return {"format": self.TREE_FORMAT, "version": self.TREE_VERSION,
+                "n_procs": int(self.n_procs), "n_cols": int(self._cols)}
+
+    def load_tree(self, tree: Mapping[str, Any],
+                  meta: Mapping[str, Any]) -> None:
+        """Restore the state captured by :meth:`to_tree` into this store
+        (dimensions grow as needed; prior contents are replaced).
         Restored rows are all marked dirty, so a fresh device view
         re-uploads everything on its first refresh."""
-        time = np.asarray(arrays["time"])
+        check_tree_format(meta, self.TREE_FORMAT, self.TREE_VERSION)
+        time = np.asarray(tree["time"])
         rows, cols = time.shape
         self.ensure_rows(rows)
         self.ensure_columns(cols)
@@ -741,21 +816,26 @@ class PerfStore:
         self.samples[:, :] = 0
         self._mask[:, :] = False
         self.time[:rows, :cols] = time
-        self.time_var[:rows, :cols] = arrays["time_var"]
-        self.samples[:rows, :cols] = arrays["samples"]
-        self._mask[:rows, :cols] = arrays["mask"]
+        self.time_var[:rows, :cols] = tree["time_var"]
+        self.samples[:rows, :cols] = tree["samples"]
+        self._mask[:rows, :cols] = tree["mask"]
         self._count = int(np.count_nonzero(self._mask))
         self._dirty[:] = True
         self._counters = {}
+        # a store with zero counters serializes "counters" as an empty
+        # dict, which some tree transports drop — counter_names is the
+        # authority, so absence is only legal when it says "none"
+        blocks = tree.get("counters", {})
         for i, name in enumerate(meta["counter_names"]):
-            blk = arrays["counters"][f"c{i}"]
             cc = self._counter_cols(name)
-            for v in np.asarray(blk["vids"]).tolist():
-                cc.slot(int(v))
-            k = len(cc.vids)
-            cc.ensure_rows(self.n_procs)
-            cc.values[:rows, :k] = blk["values"]
-            cc.mask[:rows, :k] = blk["mask"]
+            cc.load_tree(blocks[f"c{i}"])
+
+    @classmethod
+    def from_tree(cls, tree: Mapping[str, Any],
+                  meta: Mapping[str, Any]) -> "PerfStore":
+        store = cls(int(meta["n_procs"]), int(meta["n_cols"]))
+        store.load_tree(tree, meta)
+        return store
 
     # -- shard merge (streamed multi-host assembly) --------------------
     def merge_shard(self, shard: "PerfStore") -> None:
@@ -1101,6 +1181,54 @@ class CommIndex:
             n += sum(8 * len(g) for g in groups)
         return n
 
+    # -- checkpoint-tree seam ------------------------------------------
+    def to_tree(self) -> Tuple[Dict[str, np.ndarray], Dict[str, Any]]:
+        """(tree, meta): the O(P) comm index as flat int64 arrays.
+
+        p2p edges become one (n, 4) ``[sp, sv, dp, dv]`` block (sorted,
+        so the tree is a canonical form of the edge SET); collective
+        groups become a ragged (vid, size, flat-members) triple in
+        per-vid registration order.  Cliques are never materialized.
+        """
+        self._materialize_p2p()
+        p2p = np.asarray(
+            [[sp, sv, dp, dv] for (sp, sv), (dp, dv) in sorted(self._p2p)],
+            np.int64).reshape(-1, 4)
+        vids: List[int] = []
+        sizes: List[int] = []
+        members: List[int] = []
+        for vid in sorted(self._groups):
+            for group in self._groups[vid]:
+                vids.append(vid)
+                sizes.append(len(group))
+                members.extend(group)
+        tree = {"p2p": p2p,
+                "group_vids": np.asarray(vids, np.int64),
+                "group_sizes": np.asarray(sizes, np.int64),
+                "group_members": np.asarray(members, np.int64)}
+        return tree, {"format": "commindex", "version": 1}
+
+    @classmethod
+    def from_tree(cls, tree: Mapping[str, Any],
+                  meta: Optional[Mapping[str, Any]] = None) -> "CommIndex":
+        check_tree_format(meta, "commindex", 1)
+        ci = cls()
+        p2p = np.asarray(tree["p2p"], np.int64).reshape(-1, 4)
+        for sp, sv, dp, dv in p2p.tolist():
+            # rows are pre-deduplicated (serialized from a set), so the
+            # add_p2p membership probe is skipped
+            edge = ((sp, sv), (dp, dv))
+            ci._p2p.add(edge)
+            ci._p2p_preds.setdefault(edge[1], []).append(edge[0])
+        vids = np.asarray(tree["group_vids"], np.int64).tolist()
+        sizes = np.asarray(tree["group_sizes"], np.int64).tolist()
+        members = np.asarray(tree["group_members"], np.int64).tolist()
+        off = 0
+        for vid, size in zip(vids, sizes):
+            ci.add_group(vid, members[off:off + size])
+            off += size
+        return ci
+
 
 class PPG:
     """Program performance graph: the PSG replicated across ``n_procs``
@@ -1181,3 +1309,36 @@ class PPG:
 
     def nbytes(self) -> int:
         return self.psg.nbytes() + self.perf.nbytes() + self.comm.nbytes()
+
+    # -- checkpoint-tree seam ------------------------------------------
+    def to_tree(self) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+        """(tree, meta): PSG + perf store + comm index as one pytree.
+
+        The perf component serializes through whatever store backs this
+        PPG — a plain :class:`PerfStore` or a
+        :class:`~repro.core.shard.ShardedStore` (its meta ``format``
+        records which, and :meth:`from_tree` rebuilds the same kind).
+        """
+        psg_tree, psg_meta = self.psg.to_tree()
+        perf_tree, perf_meta = self.perf.to_tree()
+        comm_tree, comm_meta = self.comm.to_tree()
+        tree = {"psg": psg_tree, "perf": perf_tree, "comm": comm_tree}
+        meta = {"format": "ppg", "version": 1,
+                "n_procs": int(self.n_procs),
+                "psg": psg_meta, "perf": perf_meta, "comm": comm_meta}
+        return tree, meta
+
+    @classmethod
+    def from_tree(cls, tree: Mapping[str, Any],
+                  meta: Mapping[str, Any]) -> "PPG":
+        check_tree_format(meta, "ppg", 1)
+        psg = PSG.from_tree(tree["psg"], meta.get("psg"))
+        perf_meta = meta["perf"]
+        if perf_meta.get("format") == "shardedstore":
+            from repro.core.shard import ShardedStore
+            perf = ShardedStore.from_tree(tree["perf"], perf_meta)
+        else:
+            perf = PerfStore.from_tree(tree["perf"], perf_meta)
+        ppg = cls(psg, int(meta["n_procs"]), perf)
+        ppg.comm = CommIndex.from_tree(tree["comm"], meta.get("comm"))
+        return ppg

@@ -102,6 +102,19 @@ class PerfShard(PerfStore):
         """Global proc indices -> this shard's local row indices."""
         return np.asarray(procs, np.intp) - self.proc_start
 
+    def _tree_meta(self) -> Dict[str, Any]:
+        meta = super()._tree_meta()
+        meta["proc_start"] = int(self.proc_start)
+        return meta
+
+    @classmethod
+    def from_tree(cls, tree: Mapping[str, Any],
+                  meta: Mapping[str, Any]) -> "PerfShard":
+        shard = cls(int(meta.get("proc_start", 0)),
+                    int(meta["n_procs"]), int(meta["n_cols"]))
+        shard.load_tree(tree, meta)
+        return shard
+
     def __repr__(self) -> str:
         return (f"PerfShard([{self.proc_start}, {self.proc_stop}), "
                 f"{len(self)} entries)")
@@ -327,6 +340,34 @@ class ShardedStore:
         """Concatenate the blocks into one global PerfStore (the
         ``from_shards`` seam)."""
         return PerfStore.from_shards(self.shards, n_procs=self.n_procs)
+
+    # -- checkpoint-tree seam ------------------------------------------
+    def to_tree(self) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+        """(tree, meta): every per-host block through the one
+        :meth:`PerfStore.to_tree` seam — the sharded layout (ranges,
+        per-shard metas) lives in meta, so a reload rebuilds the same
+        blocks without merging or densifying anything."""
+        tree: Dict[str, Any] = {"shards": {}}
+        shard_meta = []
+        for i, sh in enumerate(self.shards):
+            sh_tree, sh_meta = sh.to_tree()
+            tree["shards"][f"s{i}"] = sh_tree
+            shard_meta.append(sh_meta)
+        meta = {"format": "shardedstore", "version": 1,
+                "n_procs": int(self.n_procs),
+                "ranges": [[sh.proc_start, sh.proc_stop]
+                           for sh in self.shards],
+                "shards": shard_meta}
+        return tree, meta
+
+    @classmethod
+    def from_tree(cls, tree: Mapping[str, Any],
+                  meta: Mapping[str, Any]) -> "ShardedStore":
+        from repro.core.graph import check_tree_format
+        check_tree_format(meta, "shardedstore", 1)
+        shards = [PerfShard.from_tree(tree["shards"][f"s{i}"], sh_meta)
+                  for i, sh_meta in enumerate(meta["shards"])]
+        return cls.of(shards)
 
 
 class DeviceShardView:

@@ -340,20 +340,20 @@ class Monitor:
             self._snapshot_locked()
 
     def _snapshot_locked(self) -> None:
-        tree: Dict[str, Dict] = {"shards": {}}
-        shard_meta: Dict[str, Dict] = {}
-        for i, sh in enumerate(self.store.shards):
-            arrays, meta = sh.state_arrays()
-            tree["shards"][f"s{i}"] = arrays
-            shard_meta[f"s{i}"] = meta
+        # the store serializes through the one to_tree seam (same path
+        # the run store persists with); the snapshot keeps its original
+        # on-disk layout — per-shard trees under "shards", layout metas
+        # under "shard_meta" — so pre-seam snapshots restore unchanged
+        store_tree, store_meta = self.store.to_tree()
+        tree: Dict[str, Dict] = {"shards": store_tree["shards"]}
         extra = {
-            "ranges": [[sh.proc_start, sh.proc_stop]
-                       for sh in self.store.shards],
+            "ranges": store_meta["ranges"],
             "high": {str(h): int(s) for h, s in self.high.items()},
             "applied": self.applied,
             "duplicates": self.duplicates,
             "detects": self.detects,
-            "shard_meta": shard_meta,
+            "shard_meta": {f"s{i}": m
+                           for i, m in enumerate(store_meta["shards"])},
         }
         self._ckpt.save(self._snap_step, tree, blocking=True,
                         extra_meta=extra)
@@ -382,7 +382,7 @@ class Monitor:
                   **kwargs)
         for i, sh in enumerate(mon.store.shards):
             key = f"s{i}"
-            sh.load_state(tree["shards"][key], meta["shard_meta"][key])
+            sh.load_tree(tree["shards"][key], meta["shard_meta"][key])
         mon.high = {int(h): int(s) for h, s in meta["high"].items()}
         mon.acked = dict(mon.high)
         mon.applied = int(meta["applied"])
@@ -395,6 +395,26 @@ class Monitor:
         """What this host's producer may safely forget up to."""
         with self._lock:
             return self.acked.get(host, 0)
+
+    # -- run-store archival --------------------------------------------
+    def archive_to(self, run_store, *, run_id: Optional[str] = None,
+                   meta: Optional[Dict] = None) -> str:
+        """Record the current fleet state as one run in a
+        :class:`repro.runs.RunStore` — the always-on service accumulates
+        history instead of discarding each report.
+
+        The full PPG (sharded store, comm index, PSG) and the latest
+        report's abnormal set go through the same ``to_tree`` seam the
+        crash snapshot uses.  Returns the new run id."""
+        with self._lock:
+            report = self.reports[-1] if self.reports else None
+            detect = {"abnormal": list(report.abnormal)} if report else None
+            run_meta = {"scale": int(self.store.n_procs),
+                        "applied": int(self.applied),
+                        "detects": int(self.detects)}
+            run_meta.update(meta or {})
+            return run_store.record(ppg=self.ppg, detect=detect,
+                                    run_id=run_id, meta=run_meta)
 
     # -- always-on service mode ----------------------------------------
     def start(self, poll_interval: float = 0.05) -> None:

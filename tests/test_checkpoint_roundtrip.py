@@ -1,0 +1,218 @@
+"""Bit-identity of the versioned to_tree/from_tree persistence seam.
+
+ONE persistence path: monitor snapshots and the run store both push
+objects through ``to_tree()`` into ``repro.checkpoint.store`` and
+rebuild with ``from_tree()``.  These tests drive random stores through
+an ACTUAL disk checkpoint (save_checkpoint -> load_checkpoint_tree),
+not just an in-memory tree copy, and assert the reload is bit-identical
+— dtypes included — with counters staying column-sparse throughout.
+
+Also pins the checkpoint-layer bugs the seam exposed: empty dict/list
+nodes used to vanish through a save/load round trip (a counter-less
+store lost its ``"counters": {}``), and slashed dict keys used to
+corrupt the manifest path namespace silently.
+"""
+import os
+import tempfile
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint.store import (load_checkpoint_tree, save_checkpoint)
+from repro.core import PSG, PerfShard, PerfStore, ShardedStore, shard_ranges
+from repro.core.graph import PPG, CommIndex, check_tree_format
+
+COUNTER_SETS = [(), ("wait_s",), ("flops", "bytes"), ("wait_s", "comm_bytes")]
+
+
+def _tree_equal(a, b, path=""):
+    """Recursive bit-identity: same structure, arrays equal with equal
+    dtype (int64 reloading as float64 is a FAIL, not a pass)."""
+    if isinstance(a, dict) or isinstance(b, dict):
+        assert isinstance(a, dict) and isinstance(b, dict), path
+        assert sorted(a) == sorted(b), path
+        for k in a:
+            _tree_equal(a[k], b[k], f"{path}/{k}")
+        return
+    aa, bb = np.asarray(a), np.asarray(b)
+    assert aa.dtype == bb.dtype, f"{path}: {aa.dtype} vs {bb.dtype}"
+    assert np.array_equal(aa, bb), path
+
+
+def _disk_roundtrip(tree, meta):
+    """Push (tree, meta) through a real checkpoint directory."""
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 0, tree, extra_meta={"seam": meta})
+        tree2, extra = load_checkpoint_tree(d, 0)
+    return tree2, extra["seam"]
+
+
+def _fill(store, entries, n_procs):
+    for i, (p, vid, ci) in enumerate(entries):
+        store.set_entries(
+            np.asarray([p % n_procs]), vid, 0.5 + 0.25 * i,
+            time_var=0.125 * i, samples=1 + (i % 4),
+            counters={nm: 3.0 * i + 100.0 * j
+                      for j, nm in enumerate(COUNTER_SETS[ci])})
+
+
+@st.composite
+def store_plan(draw):
+    n_procs = draw(st.integers(1, 10))
+    n_vertices = draw(st.integers(1, 8))
+    n_entries = draw(st.integers(0, 30))
+    entries = [(draw(st.integers(0, 9)), draw(st.integers(0, 7)),
+                draw(st.integers(0, len(COUNTER_SETS) - 1)))
+               for _ in range(n_entries)]
+    return n_procs, n_vertices, entries
+
+
+@settings(deadline=None, max_examples=30)
+@given(store_plan())
+def test_perfstore_disk_roundtrip_bit_identical(plan):
+    n_procs, n_vertices, entries = plan
+    store = PerfStore(n_procs, n_vertices)
+    _fill(store, [(p, v % n_vertices, c) for p, v, c in entries], n_procs)
+    tree, meta = store.to_tree()
+    tree2, meta2 = _disk_roundtrip(tree, meta)
+    other = PerfStore.from_tree(tree2, meta2)
+    _tree_equal(tree, other.to_tree()[0])
+    assert meta == meta2 == other.to_tree()[1]
+    for nm in store.counter_names():
+        v1 = store.counter_columns(nm)
+        v2 = other.counter_columns(nm)
+        for x, y in zip(v1, v2):
+            assert np.array_equal(x, y) and x.dtype == y.dtype
+
+
+@settings(deadline=None, max_examples=20)
+@given(store_plan(), st.integers(1, 4))
+def test_shardedstore_disk_roundtrip_bit_identical(plan, n_hosts):
+    n_procs, n_vertices, entries = plan
+    shards = []
+    for lo, hi in shard_ranges(n_procs, n_hosts):
+        sh = PerfShard(lo, hi - lo, n_vertices)
+        _fill(sh, [(p % (hi - lo), v % n_vertices, c)
+                   for p, v, c in entries], hi - lo)
+        shards.append(sh)
+    store = ShardedStore.of(shards)
+    tree, meta = store.to_tree()
+    tree2, meta2 = _disk_roundtrip(tree, meta)
+    other = ShardedStore.from_tree(tree2, meta2)
+    assert meta2 == meta
+    V = n_vertices
+    assert np.array_equal(store.time_matrix(V), other.time_matrix(V))
+    assert np.array_equal(store.var_matrix(V), other.var_matrix(V))
+    for nm in store.counter_names():
+        assert np.array_equal(store.counter_matrix(nm, V),
+                              other.counter_matrix(nm, V))
+    _tree_equal(tree, other.to_tree()[0])
+
+
+def test_counters_stay_column_sparse_on_disk():
+    """The checkpoint must hold (P, k) counter blocks, never (P, V)."""
+    store = PerfStore(6, 50)
+    store.set_entries(np.asarray([1, 3]), 7, 1.0, counters={"wait_s": 2.0})
+    store.set_entries(np.asarray([2]), 31, 1.0, counters={"wait_s": 4.0})
+    tree, meta = store.to_tree()
+    block = tree["counters"]["c0"]
+    assert block["values"].shape == (6, 2)        # two written vids, not 50
+    assert block["mask"].shape == (6, 2)
+    assert set(block["vids"].tolist()) == {7, 31}
+    tree2, meta2 = _disk_roundtrip(tree, meta)
+    other = PerfStore.from_tree(tree2, meta2)
+    assert other.counter_columns("wait_s")[1].shape[1] == 2
+
+
+def test_counterless_store_roundtrips():
+    """Regression: ``"counters": {}`` used to vanish through the
+    template-free loader (empty containers produce no leaves)."""
+    store = PerfStore(4, 3)
+    store.set_entries(np.asarray([0, 2]), 1, 2.5)
+    tree, meta = store.to_tree()
+    assert tree["counters"] == {}
+    tree2, meta2 = _disk_roundtrip(tree, meta)
+    assert "counters" in tree2 and tree2["counters"] == {}
+    other = PerfStore.from_tree(tree2, meta2)
+    assert np.array_equal(store.time_matrix(3), other.time_matrix(3))
+    assert other.counter_names() == []
+
+
+def test_empty_containers_survive_checkpoint():
+    tree = {"a": {}, "b": [], "c": {"d": np.arange(3), "e": {}}}
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 0, tree)
+        tree2, _ = load_checkpoint_tree(d, 0)
+    assert tree2["a"] == {}
+    assert tree2["b"] == []
+    assert tree2["c"]["e"] == {}
+    assert np.array_equal(tree2["c"]["d"], np.arange(3))
+
+
+def test_wholly_empty_tree_roundtrips():
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 0, {})
+        tree2, _ = load_checkpoint_tree(d, 0)
+    assert tree2 == {}
+
+
+def test_slashed_dict_key_rejected():
+    with tempfile.TemporaryDirectory() as d:
+        with pytest.raises(ValueError, match="contains '/'"):
+            save_checkpoint(d, 0, {"a/b": np.zeros(2)})
+
+
+def test_psg_and_comm_roundtrip():
+    psg = PSG()
+    psg.new_vertex("Root", "root")
+    loop = psg.new_vertex("Loop", "step", parent=0, source="m.py:1")
+    psg.new_vertex("Comp", "matmul", parent=loop.vid, source="m.py:2")
+    psg.new_vertex("Comm", "all-reduce", parent=loop.vid, source="m.py:3")
+    tree, meta = psg.to_tree()
+    tree2, meta2 = _disk_roundtrip(tree, meta)
+    other = PSG.from_tree(tree2, meta2)
+    assert other.to_json() == psg.to_json()
+
+    comm = CommIndex()
+    comm.add_p2p((0, 3), (1, 3))
+    comm.add_p2p((1, 3), (2, 3))
+    comm.add_group(3, (0, 1, 2))
+    ct, cm = comm.to_tree()
+    ct2, cm2 = _disk_roundtrip(ct, cm)
+    comm2 = CommIndex.from_tree(ct2, cm2)
+    _tree_equal(ct, comm2.to_tree()[0])
+    assert cm2 == cm
+
+
+def test_ppg_roundtrip_composes_subtrees():
+    psg = PSG()
+    psg.new_vertex("Root", "root")
+    psg.new_vertex("Comp", "comp", parent=0)
+    ppg = PPG(psg, 3)
+    ppg.perf.set_entries(np.asarray([0, 1, 2]), 1, 1.5,
+                         counters={"wait_s": 0.25})
+    ppg.comm.add_group(1, (0, 1, 2))
+    tree, meta = ppg.to_tree()
+    tree2, meta2 = _disk_roundtrip(tree, meta)
+    other = PPG.from_tree(tree2, meta2)
+    assert other.n_procs == 3
+    assert other.psg.to_json() == psg.to_json()
+    assert np.array_equal(other.times_matrix(), ppg.times_matrix())
+    _tree_equal(ppg.to_tree()[0], other.to_tree()[0])
+
+
+def test_version_header_checked():
+    store = PerfStore(2, 2)
+    tree, meta = store.to_tree()
+    bad = dict(meta)
+    bad["format"] = "something-else"
+    with pytest.raises(ValueError, match="format"):
+        PerfStore.from_tree(tree, bad)
+    future = dict(meta)
+    future["version"] = 99
+    with pytest.raises(ValueError, match="version"):
+        PerfStore.from_tree(tree, future)
+    # headerless metadata is the legacy (pre-versioning) snapshot form
+    assert check_tree_format(None, "perfstore", 1) == 1
+    assert check_tree_format({}, "perfstore", 1) == 1

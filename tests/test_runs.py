@@ -1,0 +1,405 @@
+"""Multi-run regression service: align, store, diff, cluster, report.
+
+Covers the ISSUE 10 acceptance surface:
+
+* PSG alignment edge cases — renamed vertices, added/removed subtrees,
+  permuted insertion order, and runs recorded at different proc counts
+  (alignment must be positional-free);
+* run-store round trips through the shared checkpoint seam, including
+  detect output and clustered (representative) runs;
+* ``diff_runs`` flagging an injected regression on scenario-bank
+  ground truth, with clean-vs-clean staying quiet;
+* behavior clustering determinism, compression, and the regressed
+  cluster pinpointing the true culprit processes;
+* the monitor's ``archive_to`` recording its live fleet into the store.
+"""
+import numpy as np
+import pytest
+
+from repro.core import ShardedStore, shard_ranges
+from repro.core.detect import Abnormal, NonScalable
+from repro.core.graph import PPG, PSG
+from repro.core.inject import simulate
+from repro.monitor import Monitor, QueueTransport, ShardProducer, \
+    build_chaos_psg
+from repro.runs import (Alignment, RunStore, align_psgs, behavior_matrix,
+                        cluster_procs, diff_runs, regressed_cluster,
+                        render_regression_report, representative_ppg,
+                        run_metadata, scaling_curves, vertex_signatures)
+from repro.scenarios import bank
+from repro.scenarios.faults import SerialFraction
+
+
+# ---------------------------------------------------------------------------
+# alignment
+# ---------------------------------------------------------------------------
+
+def _psg(spec):
+    """Build a PSG from (kind, name, parent) triples; root is vid 0."""
+    g = PSG()
+    g.new_vertex("Root", "root")
+    for kind, name, parent in spec:
+        g.new_vertex(kind, name, parent=parent, source=f"{name}.py:1")
+    return g
+
+
+BASE_SPEC = [("Loop", "step", 0), ("Comp", "fwd", 1), ("Comp", "bwd", 1),
+             ("Comm", "all-reduce", 1)]
+
+
+def test_align_identical_graphs():
+    a, b = _psg(BASE_SPEC), _psg(BASE_SPEC)
+    al = align_psgs(a, b)
+    assert al.pairs == [(i, i) for i in range(5)]
+    assert al.a_only == [] and al.b_only == []
+
+
+def test_align_renamed_vertex_is_explicit_not_positional():
+    a = _psg(BASE_SPEC)
+    b = _psg([("Loop", "step", 0), ("Comp", "fwd_fused", 1),
+              ("Comp", "bwd", 1), ("Comm", "all-reduce", 1)])
+    al = align_psgs(a, b)
+    assert al.a_only == [2]               # old "fwd" removed...
+    assert al.b_only == [2]               # ...new "fwd_fused" added
+    assert (2, 2) not in al.pairs         # NOT silently matched by position
+    assert al.a_to_b[3] == 3 and al.a_to_b[2] == -1
+
+
+def test_align_added_and_removed_subtrees():
+    a = _psg(BASE_SPEC)
+    b = _psg(BASE_SPEC + [("Loop", "eval", 0), ("Comp", "logits", 5)])
+    al = align_psgs(a, b)
+    assert al.n_matched == 5
+    assert al.b_only == [5, 6]
+    back = align_psgs(b, a)
+    assert back.a_only == [5, 6] and back.b_only == []
+
+
+def test_align_permuted_insertion_order():
+    a = _psg(BASE_SPEC)
+    # same program, vertices inserted in a different order: vids differ
+    b = PSG()
+    b.new_vertex("Root", "root")
+    b.new_vertex("Loop", "step", parent=0)
+    b.new_vertex("Comm", "all-reduce", parent=1)
+    b.new_vertex("Comp", "bwd", parent=1)
+    b.new_vertex("Comp", "fwd", parent=1)
+    al = align_psgs(a, b)
+    assert al.a_only == [] and al.b_only == []
+    m = dict(al.pairs)
+    assert b.vertices[m[2]].name == "fwd"
+    assert b.vertices[m[3]].name == "bwd"
+    assert b.vertices[m[4]].name == "all-reduce"
+
+
+def test_align_duplicate_names_match_by_occurrence_rank():
+    spec = [("Loop", "step", 0), ("Comp", "comp", 1), ("Comp", "comp", 1)]
+    a, b = _psg(spec), _psg(spec)
+    al = align_psgs(a, b)
+    assert al.pairs == [(0, 0), (1, 1), (2, 2), (3, 3)]
+    sigs = vertex_signatures(a)
+    assert sigs[2][1] == 0 and sigs[3][1] == 1      # occurrence ranks
+
+
+# ---------------------------------------------------------------------------
+# store round trips
+# ---------------------------------------------------------------------------
+
+def _sim_pair(n=32, scenario="amdahl_serial_fraction", scales=None):
+    """(clean series, faulted series, plan) on scenario ground truth."""
+    sc = bank.get_scenario(scenario)
+    psg, plan, trace = sc.build(n)
+    scales = scales or [n // 4, n // 2, n]
+    bad = bank.simulate_series(psg, scales, plan.time_at_scale,
+                               inject=plan.inject, seed=sc.seed)
+    clean = SerialFraction(frac=0.0).plan(trace, psg, n, sc.seed)
+    good = bank.simulate_series(psg, scales, clean.time_at_scale,
+                                inject=clean.inject, seed=sc.seed)
+    return good, bad, plan
+
+
+def test_store_roundtrip_series_and_detect(tmp_path):
+    good, bad, plan = _sim_pair()
+    store = RunStore(str(tmp_path))
+    detect = {
+        "non_scalable": [NonScalable(vid=3, slope=-0.1, share=0.5,
+                                     score=1.0, times={8: 0.2, 32: 0.19},
+                                     kind="Comp", name="x", source="x.py:1")],
+        "abnormal": [Abnormal(vid=2, proc=7, time=0.5, typical=0.1,
+                              ratio=5.0, kind="Comp", name="y")],
+    }
+    rid = store.record(series=bad, detect=detect, meta={"label": "nightly"})
+    assert store.runs() == [rid] and rid in store
+    rec = store.load(rid)
+    assert rec.meta["label"] == "nightly"
+    assert rec.meta["schema_version"] == 1
+    assert "commit" in rec.meta and "wall_time" in rec.meta
+    assert rec.scale == 32
+    assert rec.scales.tolist() == [8, 16, 32]
+    # detect dataclasses come back as dataclasses, int keys restored
+    ns = rec.detect["non_scalable"][0]
+    assert isinstance(ns, NonScalable) and ns.times == {8: 0.2, 32: 0.19}
+    ab = rec.detect["abnormal"][0]
+    assert isinstance(ab, Abnormal) and ab.proc == 7
+    # PPG reload is bit-identical through the seam
+    top = bad[32]
+    assert np.array_equal(np.asarray(rec.ppg.times_matrix()),
+                          np.asarray(top.times_matrix()))
+    assert rec.psg.to_json() == top.psg.to_json()
+
+
+def test_store_ids_are_sequential_and_collision_checked(tmp_path):
+    good, bad, _ = _sim_pair(n=16, scales=[8, 16])
+    store = RunStore(str(tmp_path))
+    r0 = store.record(ppg=good[16])
+    r1 = store.record(ppg=bad[16])
+    assert [r0, r1] == ["run_000000", "run_000001"] == store.runs()
+    with pytest.raises(ValueError, match="already recorded"):
+        store.record(ppg=good[16], run_id=r0)
+    assert store.latest().run_id == r1
+
+
+def test_store_clustered_record_compresses_rows(tmp_path):
+    good, bad, plan = _sim_pair(n=32, scales=[32])
+    store = RunStore(str(tmp_path))
+    rid = store.record(ppg=bad[32], cluster=4)
+    rec = store.load(rid)
+    assert rec.clustering is not None
+    assert rec.clustering.n_procs == 32            # original fleet size
+    assert rec.clustering.n_clusters <= 4
+    assert rec.ppg.n_procs == rec.clustering.n_clusters   # stored rows
+    assert rec.scale == 32
+    assert int(rec.clustering.counts.sum()) == 32
+
+
+def test_run_metadata_stamp():
+    m = run_metadata(extra_field=7)
+    assert m["schema_version"] == 1
+    assert m["extra_field"] == 7
+    assert isinstance(m["wall_time"], float) and "timestamp" in m
+
+
+# ---------------------------------------------------------------------------
+# diff
+# ---------------------------------------------------------------------------
+
+def test_diff_flags_injected_fault_and_clean_is_quiet(tmp_path):
+    good, bad, plan = _sim_pair()
+    store = RunStore(str(tmp_path))
+    a = store.load(store.record(series=good))
+    b = store.load(store.record(series=bad))
+    d = diff_runs(a, b)
+    assert d.regressed_vids, "injected fault not flagged"
+    truth = set(int(v) for v in plan.target_vids)
+    k = max(1, len(truth))
+    hits = sum(1 for v in d.regressed_vids[:k] if v in truth)
+    assert hits / k >= 0.8
+    top = d.regressions[0]
+    assert top.ratio > 1.25 and top.slope_delta > 0.25
+    # clean vs itself: nothing regresses
+    a2 = store.load(store.record(series=good))
+    quiet = diff_runs(a, a2)
+    assert quiet.regressions == []
+    assert quiet.alignment.a_only == [] and quiet.alignment.b_only == []
+
+
+def test_diff_reports_graph_drift(tmp_path):
+    good, _, _ = _sim_pair(n=16, scales=[8, 16])
+    store = RunStore(str(tmp_path))
+    a = store.load(store.record(series=good))
+    # same perf data, but the candidate PSG grew an extra subtree
+    top = good[16]
+    psg2 = PSG.from_json(top.psg.to_json())
+    extra = psg2.new_vertex("Loop", "eval", parent=psg2.root)
+    ppg2 = PPG(psg2, top.n_procs, perf=top.perf)
+    b = store.load(store.record(ppg=ppg2))
+    d = diff_runs(a, b)
+    assert d.added == ["Loop eval"]
+    assert d.removed == []
+    assert extra.vid in d.alignment.b_only
+
+
+def test_diff_across_different_proc_counts(tmp_path):
+    """Runs recorded at different scales still align and diff."""
+    good16, _, _ = _sim_pair(n=16, scales=[8, 16])
+    _, bad32, plan = _sim_pair(n=32, scales=[16, 32])
+    store = RunStore(str(tmp_path))
+    a = store.load(store.record(series=good16))
+    b = store.load(store.record(series=bad32))
+    # the runs share scale 16: that is the comparison point
+    d = diff_runs(a, b)
+    assert d.base_scale == 16 and d.cand_scale == 16
+    assert d.alignment.n_matched == len(a.psg.vertices)
+    assert set(int(v) for v in plan.target_vids) <= set(d.regressed_vids)
+    # fully disjoint scales: each run compares at its own top scale
+    _, bad24, _ = _sim_pair(n=24, scales=[12, 24])
+    c = store.load(store.record(series=bad24))
+    d2 = diff_runs(a, c)
+    assert d2.base_scale == 16 and d2.cand_scale == 24
+    assert d2.alignment.n_matched == len(a.psg.vertices)
+
+
+def test_diff_peak_ratio_catches_few_proc_fault(tmp_path):
+    """A fault on a handful of procs barely moves the mean curve; the
+    peak-row ratio is what flags it."""
+    sc = bank.get_scenario("serving_batch_skew")
+    n = 64
+    psg, plan, trace = sc.build(n)
+    clean = SerialFraction(frac=0.0).plan(trace, psg, n, sc.seed)
+    ppg_bad = simulate(psg, n, plan.base_fn, inject=plan.inject,
+                       seed=sc.seed).ppg
+    ppg_good = simulate(psg, n, clean.base_fn, inject=clean.inject,
+                        seed=sc.seed).ppg
+    store = RunStore(str(tmp_path))
+    a = store.load(store.record(ppg=ppg_good))
+    b = store.load(store.record(ppg=ppg_bad))
+    d = diff_runs(a, b)
+    assert set(int(v) for v in plan.target_vids) <= set(d.regressed_vids)
+    flagged = {x.vid_cand: x for x in d.regressions}
+    tv = int(sorted(plan.target_vids)[0])
+    assert flagged[tv].peak_ratio >= 1.25
+
+
+def test_scaling_curves_shape():
+    good, _, _ = _sim_pair(n=16, scales=[8, 16])
+    scales, M = scaling_curves(good)
+    assert scales.tolist() == [8, 16]
+    assert M.shape == (2, len(good[16].psg.vertices))
+    assert (M >= 0).all() and M.max() > 0
+
+
+# ---------------------------------------------------------------------------
+# clustering
+# ---------------------------------------------------------------------------
+
+def test_cluster_identical_procs_collapse_to_one():
+    good, _, _ = _sim_pair(n=16, scales=[16])
+    cl = cluster_procs(good[16], max_clusters=8)
+    assert cl.n_clusters == 1
+    assert cl.membership.tolist() == [0] * 16
+    assert cl.compression() == 16.0
+
+
+def test_cluster_separates_culprits_and_is_deterministic():
+    sc = bank.get_scenario("serving_batch_skew")
+    n = 64
+    psg, plan, _ = sc.build(n)
+    ppg = simulate(psg, n, plan.base_fn, inject=plan.inject,
+                   seed=sc.seed).ppg
+    cl1 = cluster_procs(ppg, max_clusters=16)
+    cl2 = cluster_procs(ppg, max_clusters=16)
+    assert cl1.membership.tolist() == cl2.membership.tolist()
+    assert np.array_equal(cl1.rep_procs, cl2.rep_procs)
+    assert 1 < cl1.n_clusters <= 16
+    # no cluster mixes culprit and clean procs
+    culprits = set(int(p) for p in plan.culprit_procs)
+    for k in range(cl1.n_clusters):
+        members = set(cl1.members(k).tolist())
+        assert not (members & culprits) or members <= culprits, k
+
+
+def test_representative_ppg_rows_are_the_reps():
+    sc = bank.get_scenario("serving_batch_skew")
+    n = 32
+    psg, plan, _ = sc.build(n)
+    ppg = simulate(psg, n, plan.base_fn, inject=plan.inject,
+                   seed=sc.seed).ppg
+    cl = cluster_procs(ppg, max_clusters=8)
+    rep = representative_ppg(ppg, cl)
+    assert rep.n_procs == cl.n_clusters
+    t_full = np.asarray(ppg.times_matrix(), float)
+    t_rep = np.asarray(rep.times_matrix(), float)
+    for row, proc in enumerate(cl.rep_procs.tolist()):
+        assert np.array_equal(t_rep[row], t_full[proc])
+
+
+def test_behavior_matrix_is_times_plus_counters():
+    good, _, _ = _sim_pair(n=8, scales=[8])
+    ppg = good[8]
+    X = behavior_matrix(ppg)
+    V = len(ppg.psg.vertices)
+    assert X.shape[0] == 8 and X.shape[1] >= V
+    assert np.array_equal(X[:, :V], np.asarray(ppg.times_matrix(), float))
+
+
+# ---------------------------------------------------------------------------
+# report + regressed cluster
+# ---------------------------------------------------------------------------
+
+def test_report_names_vertex_cluster_and_path(tmp_path):
+    sc = bank.get_scenario("serving_batch_skew")
+    n = 64
+    psg, plan, trace = sc.build(n)
+    clean = SerialFraction(frac=0.0).plan(trace, psg, n, sc.seed)
+    ppg_bad = simulate(psg, n, plan.base_fn, inject=plan.inject,
+                       seed=sc.seed).ppg
+    ppg_good = simulate(psg, n, clean.base_fn, inject=clean.inject,
+                        seed=sc.seed).ppg
+    store = RunStore(str(tmp_path))
+    a = store.load(store.record(ppg=ppg_good, cluster=16))
+    b = store.load(store.record(ppg=ppg_bad, cluster=16))
+    d = diff_runs(a, b)
+    assert d.regressed_vids
+    k = regressed_cluster(b, d)
+    assert k is not None
+    members = set(b.clustering.members(k).tolist())
+    culprits = set(int(p) for p in plan.culprit_procs)
+    assert members and members <= culprits     # regressed cluster is pure
+    text = render_regression_report(a, b, d)
+    assert "Regressed vertices" in text
+    assert "Regressed cluster" in text
+    assert f"cluster {k}" in text
+    assert "Root-cause walk" in text
+    tv = int(sorted(plan.target_vids)[0])
+    assert psg.vertices[tv].name in text
+
+
+def test_regressed_cluster_none_without_clustering(tmp_path):
+    good, bad, _ = _sim_pair(n=16, scales=[8, 16])
+    store = RunStore(str(tmp_path))
+    a = store.load(store.record(series=good))
+    b = store.load(store.record(series=bad))
+    d = diff_runs(a, b)
+    assert regressed_cluster(b, d) is None
+    # report still renders, without the cluster section
+    text = render_regression_report(a, b, d)
+    assert "Regressed cluster" not in text
+
+
+# ---------------------------------------------------------------------------
+# monitor -> run store
+# ---------------------------------------------------------------------------
+
+def test_monitor_archive_to_run_store(tmp_path):
+    psg = build_chaos_psg(6)
+    n_procs, n_hosts = 12, 3
+    ranges = shard_ranges(n_procs, n_hosts)
+    sim = simulate(psg, n_procs,
+                   lambda p, v: 0.0 if psg.vertices[v].kind == "Comm"
+                   else 1.0 + 0.01 * v,
+                   inject={(5, 2): 3.0}, comm_time=lambda *a: 0.05,
+                   jitter=0.0, seed=0, shards=ranges)
+    truth = sim.ppg
+    tr = QueueTransport()
+    mon = Monitor(psg, ranges, tr, comm=truth.comm, detect_every=1)
+    prod = ShardedStore(ranges, len(psg.vertices))
+    for h in range(n_hosts):
+        sh = prod.shards[h]
+        sh.apply_rows(truth.perf.shards[h].extract_rows(
+            np.arange(sh.n_procs)))
+        ShardProducer(h, sh, tr, sleep=lambda s: None).flush(heartbeat=False)
+    mon.poll()
+    store = RunStore(str(tmp_path))
+    rid = mon.archive_to(store, meta={"label": "live"})
+    rec = store.load(rid)
+    assert rec.scale == n_procs
+    assert rec.meta["label"] == "live"
+    assert rec.meta["applied"] > 0
+    # archived state is bit-identical to the live fleet's store
+    V = len(psg.vertices)
+    assert np.array_equal(np.asarray(rec.ppg.times_matrix()),
+                          np.asarray(mon.store.time_matrix(V)))
+    # the monitor's abnormal flags rode along as detect output
+    assert rec.detect is not None
+    assert {a.vid for a in rec.detect["abnormal"]} \
+        == {a.vid for a in mon.reports[-1].abnormal}

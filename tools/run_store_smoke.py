@@ -1,0 +1,141 @@
+"""Run-store smoke: the multi-run regression service's end-to-end gate.
+
+``make run-store-smoke`` (part of ``make check``) drives the two
+acceptance claims of the run store (ISSUE 10), jax-free:
+
+**A — cross-run diff accuracy.** The ``amdahl_serial_fraction``
+scenario is replayed at 512 processes over its scale ladder twice —
+once clean (``SerialFraction(frac=0.0)``, ideal scaling) and once
+faulted — both runs recorded in a :class:`repro.runs.RunStore` and
+compared with ``diff_runs``.  The injected vertex must be flagged with
+precision >= 0.8 at k = |truth|, and a clean-vs-clean diff must flag
+nothing.
+
+**B — clustered diff at fleet scale.** A synthetic 65536-process train
+step (the bench_graph_scale step PSG) with 64 slowed culprit processes
+is recorded with ``cluster=64``: the store holds <= 64 behavior
+representatives (>= 100x row compression), the diff still flags the
+slowed vertex via the peak-row ratio, and the regressed cluster's
+membership must contain exactly the true culprit processes.
+
+Writes ``run-store-smoke.txt`` (uploaded as a CI artifact) and exits
+non-zero on any violation, failing ``make check`` loudly.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import tempfile
+import time
+
+
+def part_a(lines, n: int = 512) -> bool:
+    from repro.runs import RunStore, diff_runs, render_regression_report
+    from repro.scenarios import bank
+    from repro.scenarios.faults import SerialFraction
+
+    sc = bank.get_scenario("amdahl_serial_fraction")
+    psg, plan, trace = sc.build(n)
+    scales = [n // 8, n // 4, n // 2, n]
+    t0 = time.perf_counter()
+    bad = bank.simulate_series(psg, scales, plan.time_at_scale,
+                               inject=plan.inject, seed=sc.seed)
+    clean = SerialFraction(frac=0.0).plan(trace, psg, n, sc.seed)
+    good = bank.simulate_series(psg, scales, clean.time_at_scale,
+                                inject=clean.inject, seed=sc.seed)
+    sim_s = time.perf_counter() - t0
+
+    with tempfile.TemporaryDirectory() as d:
+        store = RunStore(d)
+        t0 = time.perf_counter()
+        a = store.load(store.record(series=good, meta={"label": "clean"}))
+        b = store.load(store.record(series=bad, meta={"label": "faulted"}))
+        store_s = time.perf_counter() - t0
+        diff = diff_runs(a, b)
+        quiet = diff_runs(a, store.load(store.record(series=good)))
+        report = render_regression_report(a, b, diff)
+
+    truth = set(int(v) for v in plan.target_vids)
+    k = max(1, len(truth))
+    hits = sum(1 for v in diff.regressed_vids[:k] if v in truth)
+    precision = hits / k
+    ok = precision >= 0.8 and not quiet.regressions
+    lines.append(f"[A] {sc.name} @ {n}: {len(diff.regressions)} regressed, "
+                 f"precision@{k}={precision:.2f} "
+                 f"(floor 0.80), clean-vs-clean regressions="
+                 f"{len(quiet.regressions)} (want 0)  "
+                 f"sim={sim_s:.2f}s store+load={store_s:.2f}s  "
+                 f"{'ok' if ok else 'VIOLATION'}")
+    for text in report.splitlines()[:14]:
+        lines.append(f"    {text}")
+    return ok
+
+
+def part_b(lines, n: int = 65536, max_clusters: int = 64) -> bool:
+    # the fleet PPG builder is shared with the graph-scale benchmark
+    # (its run_store_fleet row) — one definition of "culprit procs"
+    from benchmarks.bench_graph_scale import build_fleet_ppg, build_step_psg
+    from repro.runs import RunStore, diff_runs, regressed_cluster
+
+    psg = build_step_psg(n_comp=12, n_procs_hint=8)
+    t0 = time.perf_counter()
+    good, heavy, culprits = build_fleet_ppg(psg, n, slow=1.0)
+    bad, _, _ = build_fleet_ppg(psg, n, slow=2.5)
+    build_s = time.perf_counter() - t0
+
+    with tempfile.TemporaryDirectory() as d:
+        store = RunStore(d)
+        t0 = time.perf_counter()
+        a = store.load(store.record(ppg=good, cluster=max_clusters))
+        b = store.load(store.record(ppg=bad, cluster=max_clusters))
+        cluster_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        diff = diff_runs(a, b)
+        diff_s = time.perf_counter() - t0
+
+    reps = b.clustering.n_clusters
+    compression = b.clustering.compression()
+    k = regressed_cluster(b, diff)
+    members = set(b.clustering.members(k).tolist()) if k is not None \
+        else set()
+    ok = (reps <= max_clusters
+          and compression >= 100.0
+          and heavy in diff.regressed_vids
+          and k is not None
+          and culprits <= members)
+    lines.append(f"[B] fleet @ {n}: {reps} representatives "
+                 f"(<= {max_clusters}), compression {compression:.0f}x "
+                 f"(floor 100x), slowed vertex "
+                 f"{'flagged' if heavy in diff.regressed_vids else 'MISSED'}"
+                 f", regressed cluster {k} holds "
+                 f"{len(culprits & members)}/{len(culprits)} culprits "
+                 f"(members={len(members)})  "
+                 f"build={build_s:.2f}s record+cluster={cluster_s:.2f}s "
+                 f"diff={diff_s:.2f}s  {'ok' if ok else 'VIOLATION'}")
+    return ok
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="run-store-smoke.txt",
+                    help="where to write the smoke report")
+    ap.add_argument("--procs-a", type=int, default=512)
+    ap.add_argument("--procs-b", type=int, default=65536)
+    args = ap.parse_args(argv)
+
+    lines = []
+    ok = part_a(lines, args.procs_a)
+    ok &= part_b(lines, args.procs_b)
+    text = "\n".join(lines) + "\n"
+    print(text, end="")
+    with open(args.out, "w") as f:
+        f.write(text)
+    if not ok:
+        print("run-store smoke FAILED", file=sys.stderr)
+        return 1
+    print(f"run-store smoke ok -> {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
